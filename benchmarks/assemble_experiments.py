@@ -1,0 +1,141 @@
+"""Assemble EXPERIMENTS.md: splice generated §Dry-run/§Roofline tables and
+the §Perf hillclimb log into the placeholders.
+
+    PYTHONPATH=src python benchmarks/assemble_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.report import dryrun_table, load, roofline_table
+
+PERF_NARRATIVE = r"""
+Cells chosen from the baseline table: **A = dbrx-132b × train_4k** (worst
+MFU bound of the compute-heavy cells; most collective-bound; representative
+of the MoE family), **B = glm4-9b × prefill_32k** (most representative of
+the paper's attention-kernel technique at system level), **C = hymba-1.5b ×
+prefill_32k** (worst useful-flops ratio, memory-bound).  Full records:
+`results/hillclimb.jsonl`.
+
+### Cell A — dbrx-132b × train_4k (baseline 58.22 s, MFU bound 0.078)
+
+| iter | hypothesis (napkin math) | change | step before → after | verdict |
+|---|---|---|---|---|
+| A1 | dominant AR is the expert output [B,E,C,d]; capacity ≈ 5× tokens (top-4 @ cf 1.25), so gathering per-token slots BEFORE the cross-f reduction shrinks the psum 5× | shard_map combine-before-reduce | 58.22 → 35.67 s | **confirmed** (1.63×) |
+| A2 | with the MoE psum activation-sized, SP's per-block seq AG/RS now costs more than it saves | disable seq sharding | 35.67 → 22.53 s but 21.9 GiB > HBM | partially confirmed |
+| A3 | EP (16 experts / 16-way model axis) trades the f-contraction psum for an a2a of ≈ equal bytes | rules=ep | 58.22 → 36.33 s | refuted as a further win |
+| A4–A6 | accum trades activation memory vs nothing on traffic/token | accum ∈ {2,4,8} | 19.90 s/36.2 GiB, 22.53 s/21.9 GiB, 27.79 s/14.8 GiB | fitting frontier = accum 8 |
+| A7/A8 | cp would also remove the remaining seq collectives | cp + shard_map | 92.6 s, AG 339 GB/chip | **refuted decisively** — per-sequence dispatch needs full sequences under cp |
+
+**Adopted (now the MoE-train default): A5** = shard_map + no-SP + accum 8:
+**58.22 → 27.79 s, MFU bound 0.078 → 0.164 (2.09×), fits 14.8 GiB.**
+Dominant term still collective (dispatch resharding + grad reduction);
+next lever: sort-based dispatch to remove the scatter resharding.
+
+### Cell B — glm4-9b × prefill_32k (baseline 1.847 s, MFU bound 0.212)
+
+| iter | hypothesis | change | step before → after | verdict |
+|---|---|---|---|---|
+| B1 | Megatron-SP pays 4 residual-sized collectives/layer (≈2.1 GB); context parallelism gathers only GQA K/V (33 MB/layer) → collective 1.85 → ~0.4 s | cp preset | coll 1.85→0.86 ✓ but compute 0.80→4.99 s | partially confirmed |
+| B2/B3 | q-chunk size is the compute regression | q_chunk 512/1024 | 4.99 → 4.99 s | refuted |
+| — | *debug forward, per the methodology*: the HLO walker's per-loop breakdown pins the regression on MLP dots running 65,536 rows/chip — `mlp()`'s internal constraint forced a full-seq gather under cp; fixed the constraint (+ duplicate-axis protection in `spec()`) | | | bug found & fixed |
+| B4 | re-measure the original hypothesis | cp (fixed) | 1.847 → 1.285 s, MFU 0.304 | **confirmed** (1.44×) |
+| B6 | rest weights over all 256 chips (ZeRO fsdp_axes) | cp + zero | 1.285 → 1.276 s, peak 5.9→3.9 GiB | confirmed (memory) |
+| B2/B3/B5 | — | — | three consecutive <5% | stop |
+
+**Adopted (now the LM-prefill default): cp** — **1.847 → 1.276 s, MFU
+bound 0.212 → 0.306 (1.45×).**  Remaining dominant term: FSDP weight
+gathers, overlappable with compute on real hardware (latency-hiding
+scheduler), so the achievable MFU is higher than the bound ratio suggests.
+
+### Cell C — hymba-1.5b × prefill_32k (baseline 9.053 s, MFU bound 0.007)
+
+| iter | hypothesis | change | step before → after | verdict |
+|---|---|---|---|---|
+| C1/C2/C4 | the SSD pairwise decay matrix [B,NC,c,c,H] (∝ chunk) dominates HBM traffic | ssm chunk 128→{16,32,64} | 9.05 → 9.05 s | **refuted** — not the hog |
+| C3 | revised: the hog is full-seq activation gathers around the hybrid block under SP ([B,32768,1600]/layer); cp keeps tokens sharded | chunk32 + cp | 9.053 → 0.738 s | **confirmed** (12.3×) |
+| C6/C8 | bigger chunks amortize the inter-chunk scan; ZeRO rest-sharding | cp, chunk 128 + zero | 0.738 → 0.611 s, 2.6 GiB | confirmed |
+
+**Adopted: cp, chunk 128 — 9.053 → 0.611 s, MFU bound 0.007 → 0.108
+(14.8×).**  Now memory-bound on the SSD einsums themselves — the next
+lever is the Pallas SSD kernel (implemented in `kernels/ssd_scan.py`,
+holds the decay matrix in VMEM; excluded from the dry-run path because
+cost_analysis cannot see inside custom calls).  cp numerics for the
+SSM/hybrid families validated to 5e-7 against single-device forward.
+
+### Bonus cells promoted to defaults by the same loop
+
+* **D (multi-pod) glm4-9b × train_4k × 2×16×16**: FSDP is structurally
+  broken at batch 256 < 512 chips (model axis idle, 16× redundant compute:
+  25.2 s, 37.4 GiB ✗).  cp shards sequence on the idle axis → **5.44 s,
+  10.5 GiB ✓** after ZeRO rest-sharding.  Adopted for multi-pod train.
+* **E dbrx-132b × prefill_32k**: 2D layout 15.48 s and 21.0 GiB ✗; cp +
+  shard_map-MoE → **8.08 s, 13.8 GiB ✓** (1.92×).  Adopted for MoE prefill.
+* **F gradient reduce-scatter pinning** (`grad_shardings` in
+  make_train_step): hypothesis — the per-layer FSDP gradient reduction is
+  emitted as a full all-reduce (1.32 GiB × 40 layers on dbrx) where a
+  reduce-scatter would halve it.  Measured: no change on this container —
+  the XLA:CPU SPMD pipeline lacks the ReduceScatterCreator pass that fires
+  on the TPU toolchain.  Kept in the code (it is the correct production
+  constraint); recorded as unmeasurable-here rather than refuted.
+* **KV int8 quantization** (`LM(kv_quant=True)`): codeqwen decode_32k's
+  bf16 MHA cache is 8.6 GiB/chip — over budget with the conservative
+  estimate.  int8 + per-position scales (argmax-identical over 8 decode
+  steps, logit Δ ≤ 6e-3): **18.7 → 6.8 GiB ✓**.  Adopted for MHA decode.
+
+### Paper-faithful vs beyond-paper
+
+The paper's technique (the MEP kernel loop) is reported separately below
+and in bench_output.txt — that reproduction was completed and validated
+first (§Paper-claims).  Everything in this section is beyond-paper
+system-level optimization of the host framework, permitted by the brief
+("even with approaches the paper didn't use"); both baselines and optimized
+variants are recorded per cell above.
+"""
+
+KNOWN_ISSUES = """
+## Known issues / residual caveats
+
+* `codeqwen1.5-7b × decode_32k` initially exceeded the conservative TPU
+  estimate (18.7 GiB: an 8.6 GiB bf16 MHA cache plus the f32 copy XLA:CPU
+  materializes); fixed by int8 KV-cache quantization (6.8 GiB ✓, §Perf KV).
+* `chameleon-34b`/`command-r-35b` train cells sit within ~10–15% of the
+  16 GiB line under the conservative estimate; accum is the dial.
+* Whisper's enc-dec is excluded from the cp preset (its decoder-side
+  cross-attention layout was not reworked); its cells fit comfortably
+  under the default rules.
+* The embedding gather triggers XLA SPMD "involuntary full
+  rematerialization" warnings on some decode cells (known XLA issue
+  b/433785288); traffic is counted in the roofline.
+* rwkv6 `useful_flops_ratio` slightly exceeds 1.0 on inference cells: the
+  6·N·D yardstick over-counts its decay-LoRA parameters relative to the
+  walker's elementwise accounting of the WKV outer products (<7% effect).
+"""
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final.jsonl"
+    rows = load(path)
+    n_ok = sum(r["status"] == "OK" for r in rows.values())
+    n_skip = sum(r["status"] == "SKIP" for r in rows.values())
+    n_fail = sum(r["status"] == "FAIL" for r in rows.values())
+    fits = sum(r["status"] == "OK" and r["memory"]["fits_hbm"]
+               for r in rows.values())
+    hdr = (f"Sweep result: **{n_ok} OK / {n_skip} SKIP / {n_fail} FAIL** "
+           f"({fits}/{n_ok} within the 16 GiB HBM estimate); 40 assigned "
+           f"cells × 2 meshes = 80, with the 8 documented long_500k skips "
+           f"per mesh.\n\n")
+    md = open("benchmarks/EXPERIMENTS.template.md").read()
+    md = md.replace("<!-- DRYRUN_TABLE -->", hdr + dryrun_table(rows))
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table(rows))
+    md = md.replace("<!-- PERF_LOG -->", PERF_NARRATIVE)
+    md = md.replace("<!-- KNOWN_ISSUES -->", KNOWN_ISSUES)
+    open("EXPERIMENTS.md", "w").write(md)
+    print(f"assembled: {n_ok} ok / {n_skip} skip / {n_fail} fail, "
+          f"{fits} fit")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Shared benchmark machinery: one function per paper table.
+
+Each table runs the full MEP pipeline per kernel and reports the paper's
+three indicators: Standalone speedup (in the MEP), Integrated speedup
+(kernel reinstalled in the application / composite context), and Direct
+LLM Optimization (one-shot, no feedback loop).
+
+CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is the
+optimized kernel's trimmed-mean time and ``derived`` carries the speedups.
+``--full`` uses the paper's parameters (D=6/10, N=3/5, R=30, k=3); the
+default CI mode shrinks R/D so the whole suite stays minutes-scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core import (CPUPlatform, DirectProposer, HeuristicProposer,
+                        MEPConstraints, OptConfig, PatternStore,
+                        TPUModelPlatform, build_mep, get_case, optimize)
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def params_for(suite: str):
+    """Paper's iteration parameters: PolyBench D=6,N=3; others D=10,N=5;
+    R=30,k=3.  CI mode: R=5,k=1 and half the rounds."""
+    d, n = (6, 3) if suite == "polybench" else (10, 5)
+    if FULL:
+        return OptConfig(d_rounds=d, n_candidates=n, r=30, k=3), \
+            MEPConstraints(r=30, k=3, t_max_s=30.0)
+    return OptConfig(d_rounds=max(2, d // 2), n_candidates=n, r=5, k=1), \
+        MEPConstraints(r=5, k=1, t_max_s=2.0)
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    standalone: float
+    integrated: Optional[float]
+    direct: float
+
+    def csv(self) -> str:
+        integ = f"{self.integrated:.2f}" if self.integrated else ""
+        return (f"{self.name},{self.us_per_call:.2f},"
+                f"standalone={self.standalone:.2f}x integrated={integ}x "
+                f"direct={self.direct:.2f}x")
+
+
+def run_suite(suite: str, platform, store: PatternStore, *,
+              integrated_fn=None, seed: int = 0) -> List[Row]:
+    cfg, cons = params_for(suite)
+    rows: List[Row] = []
+    for case in _suite_cases(suite):
+        mep = build_mep(case, platform, constraints=cons, seed=seed)
+        res = optimize(case, platform, HeuristicProposer(seed, store,
+                                                         platform.name),
+                       cfg=cfg, constraints=cons, patterns=store, mep=mep)
+        direct = optimize(case, platform, DirectProposer(),
+                          cfg=OptConfig(d_rounds=1, n_candidates=1,
+                                        r=cfg.r, k=cfg.k),
+                          constraints=cons, mep=mep)
+        integ = integrated_fn(case, res) if integrated_fn else None
+        rows.append(Row(case.name, res.best_time_s * 1e6, res.speedup,
+                        integ, direct.speedup))
+        print(rows[-1].csv(), flush=True)
+    return rows
+
+
+def _suite_cases(suite: str):
+    from repro.core import cases
+    return cases(suite)
+
+
+def summarize(table: str, rows: List[Row]) -> Dict:
+    import numpy as np
+    avg = lambda xs: float(np.mean([x for x in xs if x])) if any(xs) else 0.0
+    rec = {
+        "table": table,
+        "avg_standalone": avg([r.standalone for r in rows]),
+        "avg_integrated": avg([r.integrated for r in rows]),
+        "avg_direct": avg([r.direct for r in rows]),
+        "rows": [r.csv() for r in rows],
+    }
+    print(f"# {table}: avg standalone {rec['avg_standalone']:.2f}x, "
+          f"integrated {rec['avg_integrated']:.2f}x, "
+          f"direct {rec['avg_direct']:.2f}x", flush=True)
+    return rec

@@ -1,0 +1,105 @@
+"""§Perf hillclimb driver: run the three chosen cells through their
+candidate-change ladders, appending records to results/hillclimb.jsonl.
+
+Each invocation = one hypothesis→change→measure cycle from EXPERIMENTS.md
+§Perf; the napkin math lives there, this script produces the numbers.
+"""
+import json
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+EXPERIMENTS = [
+    # (label, arch, shape, kwargs)
+    # --- Cell A: dbrx-132b × train_4k (most collective-bound, MoE) -------
+    ("A0_baseline", "dbrx-132b", "train_4k", {}),
+    ("A1_moe_shard_map", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map"}),
+    ("A2_moe_sm_noseqshard", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map", "seq_shard": False}),
+    ("A3_ep_rules", "dbrx-132b", "train_4k", {"rules_name": "ep"}),
+    ("A4_moe_sm_accum2", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map", "accum": 2}),
+    # --- Cell B: glm4-9b × prefill_32k (representative of the technique) -
+    ("B0_baseline", "glm4-9b", "prefill_32k", {}),
+    ("B1_context_parallel", "glm4-9b", "prefill_32k",
+     {"rules_name": "cp"}),
+    ("B2_cp_qchunk512", "glm4-9b", "prefill_32k",
+     {"rules_name": "cp", "q_chunk": 512}),
+    ("B3_cp_qchunk1024", "glm4-9b", "prefill_32k",
+     {"rules_name": "cp", "q_chunk": 1024}),
+    # --- Cell C: hymba-1.5b × prefill_32k (worst useful ratio, memory) ---
+    ("C0_baseline", "hymba-1.5b", "prefill_32k", {}),
+    ("C1_ssm_chunk32", "hymba-1.5b", "prefill_32k", {"ssm_chunk": 32}),
+    ("C2_ssm_chunk64", "hymba-1.5b", "prefill_32k", {"ssm_chunk": 64}),
+    ("C3_chunk32_cp", "hymba-1.5b", "prefill_32k",
+     {"ssm_chunk": 32, "rules_name": "cp"}),
+    ("C4_chunk16", "hymba-1.5b", "prefill_32k", {"ssm_chunk": 16}),
+    # --- v2 iterations after the seq-constraint fix --------------------
+    ("B4_cp_fixed", "glm4-9b", "prefill_32k", {"rules_name": "cp"}),
+    ("C5_cp_fixed", "hymba-1.5b", "prefill_32k",
+     {"ssm_chunk": 32, "rules_name": "cp"}),
+    ("C6_cp_fixed_chunk128", "hymba-1.5b", "prefill_32k",
+     {"rules_name": "cp"}),
+    ("A5_moe_sm_ns_accum8", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map", "seq_shard": False, "accum": 8}),
+    ("A6_moe_sm_ns_accum2", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map", "seq_shard": False, "accum": 2}),
+    # --- final round: cache pinning, cp for MoE train, multipod cp -----
+    ("B5_cp_cache_pinned", "glm4-9b", "prefill_32k", {"rules_name": "cp"}),
+    ("C7_cp_cache_pinned", "hymba-1.5b", "prefill_32k",
+     {"rules_name": "cp"}),
+    ("A7_cp_moe_sm", "dbrx-132b", "train_4k",
+     {"rules_name": "cp", "moe_impl": "shard_map", "accum": 4}),
+    ("A8_cp_moe_sm_accum8", "dbrx-132b", "train_4k",
+     {"rules_name": "cp", "moe_impl": "shard_map", "accum": 8}),
+    ("D1_glm4_train_mp_cp", "glm4-9b", "train_4k",
+     {"rules_name": "cp", "_multi_pod": True}),
+    ("E1_dbrx_prefill_cp_sm", "dbrx-132b", "prefill_32k",
+     {"rules_name": "cp", "moe_impl": "shard_map"}),
+    # --- round 4: ZeRO-over-all-axes fix for cp weights -----------------
+    ("D2_glm4_train_mp_cp_zero", "glm4-9b", "train_4k",
+     {"rules_name": "cp", "_multi_pod": True}),
+    ("B6_cp_zero", "glm4-9b", "prefill_32k", {"rules_name": "cp"}),
+    ("C8_cp_zero", "hymba-1.5b", "prefill_32k", {"rules_name": "cp"}),
+    ("E2_dbrx_prefill_cp_sm_zero", "dbrx-132b", "prefill_32k",
+     {"rules_name": "cp", "moe_impl": "shard_map"}),
+    # --- round 5: grad reduce-scatter pinning ---------------------------
+    ("A9_grad_rs", "dbrx-132b", "train_4k",
+     {"moe_impl": "shard_map", "seq_shard": False, "accum": 8}),
+    ("F1_glm4_train_grad_rs", "glm4-9b", "train_4k", {}),
+]
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    out_path = "results/hillclimb.jsonl"
+    done = set()
+    if os.path.exists(out_path):
+        for line in open(out_path):
+            try:
+                done.add(json.loads(line)["label"])
+            except Exception:
+                pass
+    from repro.launch.dryrun import run_cell
+    for label, arch, shape, kw in EXPERIMENTS:
+        if label in done or (only and not label.startswith(only)):
+            continue
+        print(f"== {label} ==", flush=True)
+        try:
+            mp = kw.pop("_multi_pod", False)
+            rec = run_cell(arch, shape, multi_pod=mp, **kw)
+            rec["label"] = label
+        except Exception as e:
+            rec = {"label": label, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-1500:]}
+            print("FAIL:", e, flush=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

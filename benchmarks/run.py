@@ -1,0 +1,62 @@
+"""Benchmark runner: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV per kernel plus per-table averages,
+and writes the aggregate JSON next to the dry-run results.
+
+  PYTHONPATH=src python -m benchmarks.run [--tables 1,2,3,4] [--full]
+
+``--full`` (or REPRO_BENCH_FULL=1) uses the paper's parameters
+(D=6/10, N=3/5, R=30, k=3); default CI mode keeps the suite minutes-scale.
+A shared PatternStore flows Table1 -> Table2 -> Table3 -> Table4, reproducing
+the paper's cross-kernel and cross-platform Performance Pattern
+Inheritance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tables", default="1,2,3,4")
+    ap.add_argument("--full", action="store_true",
+                    help="paper iteration parameters (slow)")
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args()
+    if args.full:
+        os.environ["REPRO_BENCH_FULL"] = "1"
+
+    from repro.core import PatternStore
+    from benchmarks import (table1_polybench_a, table2_polybench_b,
+                            table3_appsdk, table4_hotspots)
+
+    store = PatternStore(os.path.join(os.path.dirname(args.out) or ".",
+                                      "patterns.json")
+                         if args.out else None)
+    tables = {
+        "1": ("table1_polybench_a", table1_polybench_a.main),
+        "2": ("table2_polybench_b", table2_polybench_b.main),
+        "3": ("table3_appsdk", table3_appsdk.main),
+        "4": ("table4_hotspots", table4_hotspots.main),
+    }
+    results = {}
+    t0 = time.time()
+    for tid in args.tables.split(","):
+        name, fn = tables[tid.strip()]
+        print(f"== {name} ==", flush=True)
+        results[name] = fn(store)
+    results["wall_s"] = round(time.time() - t0, 1)
+    results["patterns_learned"] = len(store)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    print(f"# done in {results['wall_s']}s; patterns learned: {len(store)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 2 — PolyBench on Platform B (TPU v5e analytic model), with
+Performance Pattern Inheritance transferred from Platform A (the paper's
+NVIDIA→DCU cross-platform transfer).
+
+Standalone = modeled MEP speedup; Integrated = modeled speedup with the
+launch-overhead context of the enclosing app step; Direct = one-shot.
+Also reports rounds-to-best with and without PPI (the convergence
+acceleration claim)."""
+from __future__ import annotations
+
+from benchmarks.common import params_for, run_suite, summarize
+from repro.core import (HeuristicProposer, PatternStore, TPUModelPlatform,
+                        build_mep, optimize)
+
+
+def integrated_fn(case, res):
+    # modeled: integrated time adds the app-side launch context; ratio of
+    # baseline/optimized within that context
+    plat = TPUModelPlatform()
+    scale = min(case.scales)
+    ctx_overhead = 20e-6
+    tb = plat.time_variant(case, res.baseline_variant, scale, None,
+                           r=3, k=0).trimmed_mean_s + ctx_overhead
+    to = plat.time_variant(case, res.best_variant, scale, None,
+                           r=3, k=0).trimmed_mean_s + ctx_overhead
+    return tb / to
+
+
+def ppi_convergence(store: PatternStore):
+    """Rounds needed to reach within 5% of the best time, with vs without
+    inherited patterns (measures the paper's convergence acceleration)."""
+    from repro.core import OptConfig, MEPConstraints, get_case
+    plat = TPUModelPlatform()
+    cfg, cons = params_for("polybench")
+    out = {}
+    for name in ("gemm", "syrk"):
+        case = get_case(name)
+        r_with = optimize(case, plat, HeuristicProposer(0, store, plat.name),
+                          cfg=cfg, constraints=cons)
+        r_wo = optimize(case, plat, HeuristicProposer(0, None, plat.name),
+                        cfg=cfg, constraints=cons)
+
+        def rounds_to_best(res):
+            best = res.best_time_s * 1.05
+            for rl in res.rounds:
+                if rl.best_time_s <= best:
+                    return rl.round + 1
+            return len(res.rounds)
+
+        out[name] = {"with_ppi": rounds_to_best(r_with),
+                     "without_ppi": rounds_to_best(r_wo)}
+        print(f"# ppi_convergence {name}: {out[name]}", flush=True)
+    return out
+
+
+def main(store: PatternStore = None):
+    store = store if store is not None else PatternStore()
+    rows = run_suite("polybench", TPUModelPlatform(), store,
+                     integrated_fn=integrated_fn)
+    rec = summarize("table2_polybench_platformB", rows)
+    rec["ppi_convergence"] = ppi_convergence(store)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Table 3 — APP SDK suite (D=10, N=5) on both platforms; reported
+numbers follow the paper's DCU platform = our TPU model, with the measured
+CPU loop as the secondary check."""
+from __future__ import annotations
+
+from benchmarks.common import run_suite, summarize
+from repro.core import CPUPlatform, PatternStore, TPUModelPlatform
+
+
+def main(store: PatternStore = None):
+    store = store if store is not None else PatternStore()
+    rows = run_suite("appsdk", TPUModelPlatform(), store)
+    rec = summarize("table3_appsdk_platformB", rows)
+    rows_cpu = run_suite("appsdk", CPUPlatform(), store)
+    rec_cpu = summarize("table3_appsdk_platformA", rows_cpu)
+    rec["platformA"] = rec_cpu
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Table 4 — hotspot kernels from the large-scale application.
+
+The application is our multi-pod training stack; the kernels are its
+attention / RWKV-WKV / Mamba-SSD / MoE grouped-GEMM hotspots.  Standalone
+speedup comes from the MEP loop; Integrated speedup reinstalls the winner
+at its ops-registry site and wall-clocks a real (reduced-config) train
+forward — exactly the paper's "optimized variants are reintegrated into
+the original application for validation".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import run_suite, summarize
+from repro.core import (CPUPlatform, PatternStore, TPUModelPlatform,
+                        integrate)
+from repro.configs import get_config
+from repro.models import get_model
+
+_APP_ARCH = {
+    "attention_prefill": "glm4-9b",
+    "rwkv_wkv": "rwkv6-7b",
+    "mamba_ssd": "hymba-1.5b",
+    "moe_grouped_gemm": "qwen2-moe-a2.7b",
+}
+
+
+def _app_context(arch: str):
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              param_dtype="float32")
+    model = get_model(cfg, q_chunk=32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                              cfg.vocab_size)
+
+    def make_step():
+        def step(params, toks):
+            h, _, _ = model.forward(params, toks)
+            return jnp.sum(h)
+        return step
+
+    return make_step, (params, toks)
+
+
+def integrated_fn(case, res):
+    if case.name == "moe_grouped_gemm":
+        # the grouped-GEMM site is exercised through the MoE block's dense
+        # einsums; integration measured standalone-in-context instead
+        return None
+    make_step, args = _app_context(_APP_ARCH[case.name])
+    ir = integrate.integrated_speedup(case, res.best_variant, make_step,
+                                      args, r=5, k=1)
+    assert ir.fe_ok, f"{case.name}: integration broke FE ({ir.max_abs_err})"
+    return ir.integrated_speedup
+
+
+def main(store: PatternStore = None):
+    store = store if store is not None else PatternStore()
+    # Paper protocol: standalone and integrated are measured on the SAME
+    # platform.  Platform A (CPU) actually executes the application, so its
+    # winners are what we reinstall and validate end-to-end; Platform B
+    # (TPU model) gives the target-hardware standalone row.
+    rows_a = run_suite("hpc", CPUPlatform(), store,
+                       integrated_fn=integrated_fn)
+    rec = summarize("table4_hpc_hotspots_platformA", rows_a)
+    rows_b = run_suite("hpc", TPUModelPlatform(), store)
+    rec_b = summarize("table4_hpc_hotspots_platformB_standalone", rows_b)
+    rec["platformB_standalone"] = rec_b
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: optimize one hotspot kernel end-to-end with the MEP framework.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's full pipeline on a single kernel:
+  1. extract          — pick a KernelCase from the registry
+  2. complete (MEP)   — auto-size the Minimal Executable Program (eq. 1–2)
+  3. iterate          — D rounds × N candidates with trimmed-mean timing
+                        (eq. 3), FE filtering (eq. 4), argmin (eq. 5),
+                        AER repairs, PPI pattern recording
+  4. emit             — write the MEP as a standalone runnable .py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (CPUPlatform, HeuristicProposer, MEPConstraints,
+                        OptConfig, PatternStore, build_mep, emit_script,
+                        get_case, optimize)
+
+
+def main():
+    case = get_case("atax")                       # y = Aᵀ(Ax)
+    platform = CPUPlatform()                      # measured wall-clock loop
+    store = PatternStore("/tmp/repro_patterns.json")
+
+    constraints = MEPConstraints(t_min_s=1e-4, t_max_s=5.0,
+                                 s_max_bytes=128 * 2**20, r=10, k=1)
+    mep = build_mep(case, platform, constraints=constraints)
+    print("MEP construction log:")
+    for line in mep.log:
+        print("  ", line)
+    print(f"chosen scale={mep.scale}, S_data={mep.s_data_bytes/2**20:.1f} MiB,"
+          f" baseline T_ker={mep.t_ker_baseline_s*1e3:.2f} ms")
+
+    res = optimize(case, platform, HeuristicProposer(0, store, platform.name),
+                   cfg=OptConfig(d_rounds=4, n_candidates=3, r=10, k=1),
+                   constraints=constraints, patterns=store, mep=mep)
+
+    print(f"\nbaseline {res.baseline_time_s*1e3:8.2f} ms  "
+          f"-> best {res.best_time_s*1e3:8.2f} ms  "
+          f"({res.speedup:.2f}x standalone speedup)")
+    print(f"best variant: {res.best_variant}")
+    for rl in res.rounds:
+        ok = sum(1 for c in rl.candidates if c.status == "ok")
+        print(f"  round {rl.round}: {len(rl.candidates)} candidates "
+              f"({ok} feasible), best {rl.best_time_s*1e3:.2f} ms")
+    print(f"AER repairs: {res.aer_records}; patterns now stored: {len(store)}")
+
+    path = "/tmp/mep_atax.py"
+    with open(path, "w") as f:
+        f.write(emit_script(mep, res.best_variant))
+    print(f"standalone MEP written to {path} "
+          f"(run: PYTHONPATH=src python {path})")
+
+
+if __name__ == "__main__":
+    main()

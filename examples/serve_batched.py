@@ -1,0 +1,62 @@
+"""Batched serving example: prefill + greedy decode with slot recycling
+(continuous batching lite) on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch glm4-9b]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import BatchedServer, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    # fixed-batch path
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = generate(model, params, prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    toks = out.size
+    print(f"fixed-batch generate: {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+    # continuous-batching-lite server
+    srv = BatchedServer(model, params, slots=3, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [srv.submit(rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                       max_new=args.max_new)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    steps = 0
+    while (any(not r.done for r in reqs)) and steps < 500:
+        srv.step()
+        steps += 1
+    dt = time.time() - t0
+    done = sum(r.done for r in reqs)
+    print(f"server: {done}/{len(reqs)} requests finished in {steps} decode "
+          f"steps, {dt:.2f}s; sample: {reqs[0].tokens[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end training driver: a ~100M-param GLM4-family model for a few
+hundred steps on the synthetic pipeline, with fault-tolerant checkpointing
+and an injected mid-run failure to demonstrate restart-replay.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLMData, make_global_batch
+from repro.models import get_model
+from repro.runtime import FailureInjector, FaultTolerantLoop, StragglerWatchdog
+from repro.train import AdamWConfig, init_state
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=256,
+                    help="256 → ~30M; 512 → ~100M params")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    # ~100M-class GLM4-family config (same block structure as the full 9B)
+    base = get_config("glm4-9b")
+    cfg = dataclasses.replace(
+        base, name="glm4-100m", n_layers=4, d_model=args.dim,
+        n_heads=8, n_kv_heads=2, d_ff=args.dim * 3, head_dim=args.dim // 8,
+        vocab_size=8192, param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+    data = SyntheticLMData(cfg, args.seq, args.batch, seed=0)
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(
+        lr=3e-3, warmup_steps=30, total_steps=args.steps)))
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    loop = FaultTolerantLoop(
+        mgr, checkpoint_every=50,
+        injector=FailureInjector({args.steps // 2: 1}),   # mid-run failure
+        watchdog=StragglerWatchdog())
+
+    state = {"params": params, "opt": init_state(params)}
+    losses = []
+    t0 = time.time()
+
+    def one(state, step):
+        batch = make_global_batch(data, step)
+        p, o, m = step_fn(state["params"], state["opt"], batch)
+        losses.append(float(m["loss"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {losses[-1]:7.4f} "
+                  f"({time.time()-t0:5.1f}s)")
+        return {"params": p, "opt": o}, m
+
+    state, final = loop.run(state, one, num_steps=args.steps)
+    print(f"finished at step {final}: loss {np.mean(losses[:10]):.4f} -> "
+          f"{np.mean(losses[-10:]):.4f}  "
+          f"(restarts={loop.restarts} — survived the injected failure)")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+
+
+if __name__ == "__main__":
+    main()

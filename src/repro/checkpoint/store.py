@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic, async-capable, elastic.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per leaf plus a
+``manifest.json`` with the tree structure, step, and mesh metadata.  Writes
+go to ``step_<N>.tmp`` and are ``os.replace``d into place only when
+complete, so a preemption mid-save never corrupts the latest checkpoint.
+Loading re-shards onto whatever mesh the restarted job has (elastic
+restart): leaves are host arrays re-placed with ``jax.device_put`` under
+the new sharding.  On a real multi-host pod each host would write its
+addressable shards; the manifest format already carries the axis metadata
+needed for that (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, step: int, tree, *, extra: Optional[Dict] = None,
+                    keep: int = 3) -> str:
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"),
+                np.asarray(jax.device_get(leaf)))
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)           # atomic publish
+    _gc(path, keep)
+    return final
+
+
+def _gc(path: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d[5:]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(path, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, like_tree, *, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``like_tree``; ``shardings`` (same
+    structure) re-places leaves for the *current* mesh — elastic restart."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like_tree)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, model has {len(leaves)}"
+    out = []
+    sh_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None or
+                                 hasattr(x, "spec"))
+                 if shardings is not None else [None] * len(leaves))
+    for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        arr = arr.astype(np.asarray(leaf).dtype) if hasattr(leaf, "dtype") else arr
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step, manifest["extra"]
+
+
+class CheckpointManager:
+    """Async save + retention.  ``save`` snapshots to host then writes on a
+    background thread so the train loop is not blocked."""
+
+    def __init__(self, path: str, keep: int = 3, async_save: bool = True):
+        self.path = path
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(path, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.path, step, host_tree, extra=extra,
+                                keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, like_tree, shardings=None):
+        return load_checkpoint(self.path, like_tree, shardings=shardings)
+
+    @property
+    def latest(self) -> Optional[int]:
+        return latest_step(self.path)

@@ -1,0 +1,20 @@
+"""MEP-Opt core: the paper's contribution as a composable module.
+
+Pipeline:  extract (KernelCase) → complete (build_mep, eq. 1–2) →
+iterate (optimize, eq. 3–5, AER, PPI) → reintegrate (integrate.install).
+"""
+from repro.core.kernelcase import (ArraySpec, KernelCase, Variant, cases,
+                                   get_case, register)
+from repro.core.datagen import DataBudget, generate
+from repro.core.mep import MEP, MEPConstraints, build_mep, emit_script
+from repro.core.profiler import (CPUPlatform, Platform, TimingResult,
+                                 TPUModelPlatform, trimmed_mean, wallclock)
+from repro.core.fe import FEResult, check as fe_check, outputs_match
+from repro.core.aer import AER, RepairRecord
+from repro.core.patterns import Pattern, PatternStore
+from repro.core.proposer import (DirectProposer, HeuristicProposer,
+                                 LLMProposer, OfflineError, Proposer,
+                                 RoundState, make_proposer)
+from repro.core.optimizer import OptConfig, OptResult, optimize
+from repro.core import integrate
+from repro.core import extraction

@@ -1,0 +1,164 @@
+"""Hotspot kernel extraction (paper §3.1, "independently extracted hotspot
+kernels").
+
+Given any jittable application step, walk its jaxpr (recursing through
+scan/while/remat with trip-count multiplication, pjit/closed-call bodies)
+and attribute FLOPs to source locations.  The ranked hotspot list is what
+an engineer (or the paper's tooling) extracts into a KernelCase: each
+hotspot carries the primitive, operand shapes, a FLOP estimate, the source
+line, and — when it matches a known family — the suggested existing
+KernelCase / ops-registry site to splice an optimized variant into.
+
+    from repro.core import extraction
+    spots = extraction.profile_hotspots(train_step, params, opt, batch)
+    print(extraction.report(spots))
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+
+@dataclass
+class Hotspot:
+    primitive: str
+    flops: float
+    shapes: Tuple[Tuple[int, ...], ...]
+    source: str
+    count: int = 1                 # trip-multiplied occurrences
+    family: str = ""               # matmul | attention | scan | elementwise
+    suggested_site: str = ""       # ops-registry splice point, if known
+
+    def __str__(self) -> str:
+        return (f"{self.flops:10.3e} flops  {self.primitive:14s} "
+                f"{'x'.join(str(s) for s in self.shapes[:2])!s:40.40s} "
+                f"{self.family:10s} {self.source}")
+
+
+def _prim_flops(eqn) -> float:
+    prim = eqn.primitive.name
+    out_elems = sum(int(np.prod(v.aval.shape)) for v in eqn.outvars
+                    if hasattr(v.aval, "shape"))
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _rc), _ = dims
+        lhs = eqn.invars[0].aval.shape
+        contracted = 1
+        for d in lc:
+            contracted *= lhs[d]
+        return 2.0 * out_elems * contracted
+    if prim in ("conv_general_dilated",):
+        rhs = eqn.invars[1].aval.shape
+        return 2.0 * out_elems * int(np.prod(rhs[1:]))
+    if prim in ("add", "mul", "sub", "div", "max", "min", "exp", "log",
+                "tanh", "logistic", "rsqrt", "pow", "integer_pow",
+                "reduce_sum", "reduce_max", "select_n", "erf"):
+        return float(out_elems)
+    return 0.0
+
+
+def _source(eqn) -> str:
+    try:
+        frame = jax.api_util.user_frames(eqn.source_info)  # type: ignore
+        f = next(iter(frame))
+        return f"{f.file_name.split('/')[-1]}:{f.start_line}"
+    except Exception:
+        try:
+            name = eqn.source_info.name_stack
+            return str(name)[-60:]
+        except Exception:
+            return "?"
+
+
+def _walk(jaxpr, mult: float, acc: Dict[Tuple[str, str, Tuple], Hotspot]):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            _walk(inner, mult * eqn.params.get("length", 1), acc)
+            continue
+        if prim == "while":
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc)  # trips unknown
+            continue
+        if prim in ("jit", "pjit", "closed_call", "core_call", "remat",
+                    "remat2", "checkpoint", "custom_jvp_call",
+                    "custom_vjp_call", "custom_vjp_call_jaxpr",
+                    "shard_map", "vmap_call"):
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                if key in eqn.params:
+                    sub = eqn.params[key]
+                    _walk(getattr(sub, "jaxpr", sub), mult, acc)
+                    break
+            continue
+        fl = _prim_flops(eqn)
+        if fl <= 0:
+            continue
+        shapes = tuple(tuple(v.aval.shape) for v in eqn.invars
+                       if hasattr(v.aval, "shape"))
+        src = _source(eqn)
+        key = (prim, src, shapes)
+        if key in acc:
+            acc[key].flops += fl * mult
+            acc[key].count += int(mult)
+        else:
+            acc[key] = Hotspot(prim, fl * mult, shapes, src,
+                               count=int(mult))
+
+
+_FAMILY_SITES = {
+    # source-file heuristics → (family, ops-registry site)
+    "layers.py": ("attention", "attention"),
+    "ssm.py": ("scan", "rwkv_wkv / ssm_chunk"),
+}
+
+
+_ATTENTION_SPECS = ("bckgh", "bkgct", "bkgt", "bskgh", "bkgst")
+_SCAN_SPECS = ("bnhk", "bnhkv", "bnts", "bnthp", "bnshp", "bhkv", "bhpn")
+_MOE_SPECS = ("becd", "becf", "bsef", "emk", "edf", "efd")
+
+
+def classify(spot: Hotspot) -> Hotspot:
+    src = spot.source
+    if spot.primitive == "dot_general":
+        spot.family = "matmul"
+        if any(t in src for t in _ATTENTION_SPECS):
+            spot.family, spot.suggested_site = "attention", "attention"
+        elif any(t in src for t in _SCAN_SPECS):
+            spot.family = "scan"
+            spot.suggested_site = "rwkv_wkv / ssm_chunk"
+        elif any(t in src for t in _MOE_SPECS):
+            spot.family, spot.suggested_site = "matmul", "moe_gemm"
+        else:
+            fname = src.split(":")[0]
+            if fname in _FAMILY_SITES:
+                spot.family, spot.suggested_site = _FAMILY_SITES[fname]
+    elif spot.primitive in ("conv_general_dilated",):
+        spot.family = "stencil"
+    else:
+        spot.family = "elementwise"
+    return spot
+
+
+def profile_hotspots(fn, *args, top: int = 10, **kw) -> List[Hotspot]:
+    jaxpr = jax.make_jaxpr(fn)(*args, **kw)
+    acc: Dict[Tuple, Hotspot] = {}
+    _walk(jaxpr.jaxpr, 1.0, acc)
+    spots = sorted(acc.values(), key=lambda h: -h.flops)[:top]
+    return [classify(s) for s in spots]
+
+
+def report(spots: List[Hotspot]) -> str:
+    total = sum(s.flops for s in spots)
+    lines = [f"top {len(spots)} hotspots ({total:.3e} flops attributed):"]
+    for i, s in enumerate(spots):
+        pct = 100.0 * s.flops / total if total else 0.0
+        lines.append(f"  {i+1:2d}. [{pct:5.1f}%] {s}")
+        if s.suggested_site:
+            lines.append(f"       → splice point: ops site "
+                         f"'{s.suggested_site}'")
+    return "\n".join(lines)

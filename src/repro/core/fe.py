@@ -1,0 +1,84 @@
+"""Functional Equivalence checks (paper eq. 4).
+
+A candidate enters the feasible set C^(d) only if its outputs match the
+*baseline* kernel on the MEP's generated inputs, with dtype-aware
+tolerances.  Checks run on multiple independently-seeded input sets to
+avoid passing by coincidence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import datagen
+from repro.core.kernelcase import KernelCase, Variant
+
+_TOL = {
+    "float64": (1e-9, 1e-9),
+    "float32": (2e-4, 2e-4),
+    "bfloat16": (2e-2, 2e-2),
+    "float16": (1e-2, 1e-2),
+}
+
+
+@dataclass
+class FEResult:
+    ok: bool
+    max_abs_err: float
+    max_rel_err: float
+    detail: str = ""
+
+
+def _tol_for(arr) -> Tuple[float, float]:
+    return _TOL.get(str(np.asarray(arr).dtype), (2e-4, 2e-4))
+
+
+def outputs_match(got, want, rtol_scale: float = 1.0) -> FEResult:
+    got_l, want_l = jax.tree.leaves(got), jax.tree.leaves(want)
+    if len(got_l) != len(want_l):
+        return FEResult(False, float("inf"), float("inf"),
+                        f"output arity {len(got_l)} != {len(want_l)}")
+    worst_abs = worst_rel = 0.0
+    for g, w in zip(got_l, want_l):
+        g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
+        if g.shape != w.shape:
+            return FEResult(False, float("inf"), float("inf"),
+                            f"shape {g.shape} != {w.shape}")
+        err = np.abs(g - w)
+        # scale-aware relative error: near-zero elements are judged against
+        # the tensor's magnitude, not their own (accumulation-order noise)
+        scale = float(np.abs(w).max(initial=0.0))
+        denom = np.abs(w) + 1e-2 * scale + 1e-6
+        worst_abs = max(worst_abs, float(err.max(initial=0.0)))
+        worst_rel = max(worst_rel, float((err / denom).max(initial=0.0)))
+        if not np.all(np.isfinite(g)):
+            return FEResult(False, float("inf"), float("inf"), "non-finite")
+    rtol, atol = _tol_for(want_l[0])
+    rtol, atol = rtol * rtol_scale, atol * rtol_scale
+    ok = bool(worst_abs <= atol + rtol * 1.0 or worst_rel <= rtol * 10)
+    return FEResult(ok, worst_abs, worst_rel,
+                    "" if ok else f"abs={worst_abs:.2e} rel={worst_rel:.2e}")
+
+
+def check(case: KernelCase, variant: Variant, scale: int, *,
+          impl: str = "jnp", n_input_sets: int = 2, seed: int = 0,
+          rtol_scale: float = 1.0,
+          interpret_scale: Optional[int] = None) -> FEResult:
+    """FE(K_candidate, K_baseline): candidate vs the jnp oracle on
+    ``n_input_sets`` generated input sets."""
+    fn = case.build(variant, impl=impl)   # builds jit their own passes
+    worst = FEResult(True, 0.0, 0.0)
+    for i in range(n_input_sets):
+        inputs = datagen.generate(case.input_specs(scale), seed + 1000 + i)
+        jx = [jax.numpy.asarray(a) for a in inputs]
+        got = fn(*jx)
+        want = case.ref(*jx)
+        r = outputs_match(got, want, rtol_scale)
+        if not r.ok:
+            return r
+        worst = FEResult(True, max(worst.max_abs_err, r.max_abs_err),
+                         max(worst.max_rel_err, r.max_rel_err))
+    return worst

@@ -1,0 +1,95 @@
+"""Reintegration: swap MEP-optimized kernels back into the full application
+and validate end-to-end (paper's "Integrated Speedup").
+
+The kernel-variant registry (repro.kernels.ops) is the splice point: model
+code asks the registry for an implementation at each hotspot site, so
+installing the optimized variant requires no model edits and — crucially —
+no re-derivation of the full training step per candidate.  Only the final
+winner triggers one full build.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.kernelcase import KernelCase, Variant
+from repro.core.profiler import trimmed_mean
+from repro.kernels import ops
+
+
+@dataclass
+class IntegrationResult:
+    site: str
+    baseline_time_s: float
+    optimized_time_s: float
+    fe_ok: bool
+    max_abs_err: float
+
+    @property
+    def integrated_speedup(self) -> float:
+        return (self.baseline_time_s / self.optimized_time_s
+                if self.optimized_time_s else 0.0)
+
+
+def install(case: KernelCase, variant: Variant, *, impl: str = "jnp") -> None:
+    """Install the optimized variant at its app hotspot site."""
+    if not case.app_site:
+        raise ValueError(f"{case.name} has no app_site to integrate into")
+    ops.set_impl(case.app_site, case.build(variant, impl=impl))
+
+
+def uninstall(case: KernelCase) -> None:
+    if case.app_site:
+        ops.set_impl(case.app_site, None)
+
+
+def measure_app(step_fn: Callable, args, *, r: int = 10, k: int = 1,
+                warmup: int = 1) -> float:
+    """Wall-clock one application step (already jitted)."""
+    for _ in range(warmup):
+        out = step_fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(r):
+        t0 = time.perf_counter()
+        out = step_fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return trimmed_mean(times, k)
+
+
+def integrated_speedup(case: KernelCase, variant: Variant,
+                       make_step: Callable[[], Callable], args, *,
+                       r: int = 10, k: int = 1,
+                       baseline_variant: Optional[Variant] = None
+                       ) -> IntegrationResult:
+    """Measure the full-application step with the naive extracted kernel
+    (the application's original hotspot) vs the optimized variant installed;
+    verify end-to-end outputs still match."""
+    install(case, baseline_variant or case.baseline_variant)
+    try:
+        base_step = jax.jit(make_step())
+        t_base = measure_app(base_step, args, r=r, k=k)
+        base_out = base_step(*args)
+    finally:
+        uninstall(case)
+
+    install(case, variant)
+    try:
+        opt_step = jax.jit(make_step())
+        t_opt = measure_app(opt_step, args, r=r, k=k)
+        opt_out = opt_step(*args)
+    finally:
+        uninstall(case)
+
+    errs = [float(np.max(np.abs(np.asarray(a, np.float64)
+                                - np.asarray(b, np.float64))))
+            for a, b in zip(jax.tree.leaves(base_out), jax.tree.leaves(opt_out))
+            if hasattr(a, "shape")]
+    max_err = max(errs) if errs else 0.0
+    return IntegrationResult(case.app_site, t_base, t_opt,
+                             fe_ok=max_err < 5e-2, max_abs_err=max_err)

@@ -1,0 +1,117 @@
+"""KernelCase: the uniform abstraction for an independently-extracted
+hotspot kernel (paper §3.1).
+
+A case bundles everything the MEP framework needs to optimize a kernel
+without its host application:
+
+  * ``ref``                — the pure-jnp oracle (functional semantics)
+  * ``build(variant, impl)`` — construct an executable candidate from a
+    point in the variant space; ``impl='jnp'`` gives the algorithmic
+    restructuring as XLA-lowerable code (what Platform A wall-clocks),
+    ``impl='pallas'`` gives the Pallas TPU kernel (validated in
+    interpret mode, modeled by Platform B)
+  * ``input_specs(scale)``  — shapes/dtypes/generator kinds per input
+  * ``variant_space``       — the tunable-parameter grid the proposers walk
+  * ``flops/traffic model`` — analytic terms for the TPU platform
+
+Variants are plain dicts so they serialize into the Performance Pattern
+Inheritance store.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Variant = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ArraySpec:
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    kind: str = "normal"      # normal | uniform | positive | int | sorted
+    #                           | symmetric | spd | tokens
+    minval: float = 0.0
+    maxval: float = 1.0
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+
+@dataclass
+class KernelCase:
+    name: str
+    suite: str                                    # polybench | appsdk | hpc
+    family: str                                   # matmul | matvec | stencil
+    #                                               | reduction | scan | sort
+    #                                               | elementwise | attention
+    ref: Callable[..., Any]
+    build: Callable[..., Callable]                # (variant, impl) -> fn
+    input_specs: Callable[[int], List[ArraySpec]]
+    variant_space: Dict[str, List[Any]]
+    baseline_variant: Variant
+    flops: Callable[[int], float]
+    scales: Sequence[int] = (256, 512, 1024, 2048)
+    # analytic per-variant HBM traffic for Platform B (None → generic model)
+    traffic: Optional[Callable[[Variant, int], float]] = None
+    # analytic serialization latency (sequential scan steps, kernel-launch
+    # chains) — the term that makes chunked recurrences win on TPU even
+    # though a latency-tolerant CPU prefers the plain scan
+    latency: Optional[Callable[[Variant, int], float]] = None
+    # hotspot site in the full application ('' = standalone benchmark only)
+    app_site: str = ""
+    notes: str = ""
+
+    def data_bytes(self, scale: int) -> int:
+        return sum(s.nbytes for s in self.input_specs(scale))
+
+    def variant_latency(self, variant: Variant, scale: int) -> float:
+        return self.latency(variant, scale) if self.latency else 0.0
+
+    def generic_traffic(self, variant: Variant, scale: int) -> float:
+        """Default HBM traffic model: every input read once, output written
+        once — cases with tiling-dependent reuse override via ``traffic``."""
+        if self.traffic is not None:
+            return self.traffic(variant, scale)
+        return 2.0 * self.data_bytes(scale)
+
+
+_REGISTRY: Dict[str, KernelCase] = {}
+
+
+def register(case: KernelCase) -> KernelCase:
+    if case.name in _REGISTRY:
+        raise ValueError(f"duplicate kernel case {case.name!r}")
+    _REGISTRY[case.name] = case
+    return case
+
+
+def get_case(name: str) -> KernelCase:
+    _ensure_suites()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel case {name!r}; have "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def cases(suite: Optional[str] = None) -> List[KernelCase]:
+    _ensure_suites()
+    out = [c for c in _REGISTRY.values() if suite is None or c.suite == suite]
+    return sorted(out, key=lambda c: c.name)
+
+
+_loaded = False
+
+
+def _ensure_suites() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    # importing registers the cases
+    from repro.kernels.suites import polybench, appsdk, hpc  # noqa: F401

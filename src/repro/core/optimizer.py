@@ -1,0 +1,175 @@
+"""Performance-Feedback Iterative Optimization (paper §3.2, eq. 3–5).
+
+Round d: the proposer generates up to N candidates from the current
+baseline K^(d); each candidate is built (AER on failure), checked for
+functional equivalence (eq. 4, AER on failure), and timed with the
+R-run trimmed mean (eq. 3).  The feasible-set argmin becomes K^(d+1)
+(eq. 5).  The loop stops at d=D or when the round's improvement falls
+below the preset threshold.  Winning strategies are summarized into the
+Performance Pattern Inheritance store.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core.aer import AER
+from repro.core import fe as fe_mod
+from repro.core.kernelcase import KernelCase, Variant
+from repro.core.mep import MEP, MEPConstraints, build_mep
+from repro.core.patterns import PatternStore
+from repro.core.profiler import Platform
+from repro.core.proposer import Proposer, RoundState
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    d_rounds: int = 6            # D (paper: 6 for PolyBench, 10 for others)
+    n_candidates: int = 3        # N (paper: 3 / 5)
+    r: int = 30                  # R repeated runs
+    k: int = 3                   # trim k
+    improve_eps: float = 0.01    # stop when round gain < 1%
+    fe_input_sets: int = 2
+    fe_scale: Optional[int] = None   # None → MEP scale
+    check_pallas: bool = False       # also interpret-check the Pallas build
+
+
+@dataclass
+class CandidateLog:
+    variant: Variant
+    status: str                  # ok | build_error | fe_fail | run_error
+    time_s: float = float("inf")
+    fe_abs_err: float = 0.0
+    repairs: int = 0
+    error: str = ""
+
+
+@dataclass
+class RoundLog:
+    round: int
+    baseline_time_s: float
+    candidates: List[CandidateLog] = field(default_factory=list)
+    best_time_s: float = float("inf")
+    improved: bool = False
+
+
+@dataclass
+class OptResult:
+    case_name: str
+    platform: str
+    proposer: str
+    baseline_variant: Variant
+    baseline_time_s: float
+    best_variant: Variant
+    best_time_s: float
+    rounds: List[RoundLog] = field(default_factory=list)
+    mep_log: List[str] = field(default_factory=list)
+    aer_records: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_time_s / self.best_time_s if self.best_time_s else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "case": self.case_name, "platform": self.platform,
+            "proposer": self.proposer, "speedup": self.speedup,
+            "baseline_time_s": self.baseline_time_s,
+            "best_time_s": self.best_time_s,
+            "best_variant": self.best_variant,
+            "rounds": len(self.rounds), "aer_records": self.aer_records,
+            "wall_s": self.wall_s,
+        }
+
+
+def _evaluate(mep: MEP, case: KernelCase, variant: Variant, aer: AER,
+              proposer: Proposer, cfg: OptConfig) -> CandidateLog:
+    """build → FE → time, with AER-driven retries at each stage."""
+    v = dict(variant)
+    repairs = 0
+    while True:
+        stage = "build"
+        try:
+            fe_scale = cfg.fe_scale or min(mep.scale, min(case.scales))
+            stage = "fe"
+            rtol_scale = 200.0 if v.get("compute_dtype") == "bf16" else 1.0
+            r = fe_mod.check(case, v, fe_scale, impl="jnp",
+                             n_input_sets=cfg.fe_input_sets,
+                             rtol_scale=rtol_scale)
+            if not r.ok:
+                raise FloatingPointError(f"FE violation: {r.detail}")
+            if cfg.check_pallas:
+                rp = fe_mod.check(case, v, fe_scale, impl="pallas",
+                                  n_input_sets=1, rtol_scale=4.0)
+                if not rp.ok:
+                    raise FloatingPointError(f"FE(pallas) violation: {rp.detail}")
+            stage = "run"
+            t = mep.measure(v, r=cfg.r, k=cfg.k)
+            return CandidateLog(v, "ok", t.trimmed_mean_s,
+                                fe_abs_err=r.max_abs_err, repairs=repairs)
+        except Exception as e:  # noqa: BLE001 — every failure goes to AER
+            err = f"{type(e).__name__}: {e}"
+            fixed = proposer.repair(case, v, err) or aer.repair(v, err, stage)
+            if fixed is None or repairs >= 4:
+                status = {"build": "build_error", "fe": "fe_fail",
+                          "run": "run_error"}[stage]
+                return CandidateLog(v, status, repairs=repairs, error=err[:300])
+            v = fixed
+            repairs += 1
+
+
+def optimize(case: KernelCase, platform: Platform, proposer: Proposer, *,
+             cfg: OptConfig = OptConfig(),
+             constraints: MEPConstraints = MEPConstraints(),
+             patterns: Optional[PatternStore] = None,
+             seed: int = 0,
+             mep: Optional[MEP] = None) -> OptResult:
+    t_start = time.time()
+    mep = mep or build_mep(case, platform, constraints=constraints, seed=seed)
+    aer = AER(case, mep.scale)
+
+    baseline_v = dict(case.baseline_variant)
+    t_base = mep.measure(baseline_v, r=cfg.r, k=cfg.k).trimmed_mean_s
+    best_v, best_t = baseline_v, t_base
+    res = OptResult(case.name, platform.name, proposer.name,
+                    baseline_v, t_base, best_v, best_t,
+                    mep_log=list(mep.log))
+
+    history: List[Dict[str, Any]] = []
+    errors: List[str] = []
+    for d in range(cfg.d_rounds):
+        state = RoundState(
+            round=d, baseline_variant=best_v, baseline_time_s=best_t,
+            feedback=platform.profile_feedback(case, best_v, mep.scale),
+            history=history, errors=errors)
+        cands = proposer.propose(case, state, cfg.n_candidates)
+        rl = RoundLog(round=d, baseline_time_s=best_t)
+        for v in cands:
+            cl = _evaluate(mep, case, v, aer, proposer, cfg)
+            rl.candidates.append(cl)
+            history.append({"variant": cl.variant, "time_s": cl.time_s,
+                            "status": cl.status})
+            if cl.status != "ok":
+                errors.append(cl.error)
+        feasible = [c for c in rl.candidates if c.status == "ok"]
+        if feasible:
+            winner = min(feasible, key=lambda c: c.time_s)   # eq. 5 argmin
+            rl.best_time_s = winner.time_s
+            if winner.time_s < best_t:
+                gain = best_t / winner.time_s
+                rl.improved = gain > 1.0 + cfg.improve_eps
+                best_v, best_t = winner.variant, winner.time_s
+        res.rounds.append(rl)
+        if not rl.improved and d > 0:
+            break   # improvement below threshold
+
+    res.best_variant, res.best_time_s = best_v, best_t
+    res.aer_records = len(aer.records)
+    res.wall_s = time.time() - t_start
+    if patterns is not None:
+        patterns.record(case, platform.name, baseline_v, best_v, res.speedup)
+    return res

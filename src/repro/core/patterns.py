@@ -1,0 +1,104 @@
+"""Performance Pattern Inheritance (paper §3.2).
+
+Effective optimization patterns (tiling choices, memory strategies,
+algorithmic restructurings) discovered while optimizing one kernel are
+summarized and injected as hints for later rounds, *other kernels of the
+same family*, and *other platforms* — this is what let the paper transfer
+NVIDIA-discovered strategies to the DCU.
+
+The store is a JSON file keyed by (family, platform); each entry records
+the variant-delta that produced a win and its measured gain.  ``suggest``
+returns deltas ordered by expected gain, most-specific match first.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.kernelcase import KernelCase, Variant
+
+
+@dataclass
+class Pattern:
+    family: str
+    platform: str
+    delta: Dict[str, Any]          # variant keys that changed
+    gain: float                    # speedup attributed to the delta
+    source_kernel: str
+    ts: float = field(default_factory=time.time)
+
+    def to_dict(self):
+        return {"family": self.family, "platform": self.platform,
+                "delta": self.delta, "gain": self.gain,
+                "source_kernel": self.source_kernel, "ts": self.ts}
+
+    @staticmethod
+    def from_dict(d):
+        return Pattern(d["family"], d["platform"], d["delta"], d["gain"],
+                       d.get("source_kernel", "?"), d.get("ts", 0.0))
+
+
+class PatternStore:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self.patterns: List[Pattern] = []
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self.patterns = [Pattern.from_dict(d) for d in json.load(f)]
+
+    # ------------------------------------------------------------------
+    def record(self, case: KernelCase, platform: str, baseline: Variant,
+               best: Variant, gain: float) -> Optional[Pattern]:
+        """Summarize the winning strategy as a delta vs the baseline."""
+        delta = {k: v for k, v in best.items() if baseline.get(k) != v}
+        if not delta or gain <= 1.02:
+            return None
+        p = Pattern(case.family, platform, delta, gain, case.name)
+        with self._lock:
+            self.patterns.append(p)
+            self._flush()
+        return p
+
+    def suggest(self, case: KernelCase, platform: str,
+                max_hints: int = 4) -> List[Dict[str, Any]]:
+        """Hints ordered: same family + same platform, then same family
+        cross-platform (the paper's cross-platform inheritance), then
+        generic high-gain patterns."""
+        def score(p: Pattern) -> float:
+            s = p.gain
+            if p.family == case.family:
+                s *= 4
+            if p.platform == platform:
+                s *= 2
+            if p.source_kernel == case.name:
+                s *= 0.5       # avoid echoing the kernel's own history
+            return s
+
+        ranked = sorted(self.patterns, key=score, reverse=True)
+        seen, out = set(), []
+        for p in ranked:
+            key = tuple(sorted(p.delta.items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(dict(p.delta))
+            if len(out) >= max_hints:
+                break
+        return out
+
+    # ------------------------------------------------------------------
+    def _flush(self):
+        if not self.path:
+            return
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump([p.to_dict() for p in self.patterns], f, indent=1)
+        os.replace(tmp, self.path)
+
+    def __len__(self):
+        return len(self.patterns)

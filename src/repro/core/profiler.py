@@ -1,0 +1,177 @@
+"""Timing + platform abstraction.
+
+Eq. 3 of the paper: each candidate is run R times, the R measurements are
+sorted, the lowest and highest k are discarded, and the rest averaged
+(trimmed mean) to suppress system noise.
+
+Two platforms mirror the paper's NVIDIA/DCU pair (DESIGN.md §3):
+
+* ``CPUPlatform``       — wall-clocks the jit-compiled jnp lowering of a
+  variant on the host CPU (a *measured* feedback signal).
+* ``TPUModelPlatform``  — analytic TPU v5e roofline over the case's
+  flops/traffic model (+ optionally the while-aware HLO walker), since no
+  TPU exists in this container.  Timing = max(compute, memory) + a fixed
+  per-launch overhead.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.kernelcase import KernelCase, Variant
+from repro.launch import mesh as hw
+
+
+@dataclass
+class TimingResult:
+    trimmed_mean_s: float
+    times_s: List[float]
+    r: int
+    k: int
+
+    @property
+    def raw_mean_s(self) -> float:
+        return float(np.mean(self.times_s))
+
+
+def trimmed_mean(times: Sequence[float], k: int) -> float:
+    """Eq. 3: drop lowest/highest k of R sorted measurements (R > 2k)."""
+    r = len(times)
+    if r <= 2 * k:
+        raise ValueError(f"R={r} must exceed 2k={2 * k}")
+    s = sorted(times)
+    kept = s[k:r - k] if k else s
+    return float(np.mean(kept))
+
+
+def wallclock(fn: Callable, inputs, *, r: int, k: int,
+              warmup: int = 1) -> TimingResult:
+    for _ in range(warmup):
+        out = fn(*inputs)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(r):
+        t0 = time.perf_counter()
+        out = fn(*inputs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return TimingResult(trimmed_mean(times, k), times, r, k)
+
+
+# --------------------------------------------------------------------------
+class Platform:
+    name: str = "abstract"
+
+    def time_variant(self, case: KernelCase, variant: Variant, scale: int,
+                     inputs, *, r: int, k: int) -> TimingResult:
+        raise NotImplementedError
+
+    def profile_feedback(self, case: KernelCase, variant: Variant,
+                         scale: int) -> Dict[str, float]:
+        """Profiler counters handed to the proposer (paper: cache hit rate,
+        occupancy; here: arithmetic intensity, VMEM footprint, ...)."""
+        fl = case.flops(scale)
+        tb = case.generic_traffic(variant, scale)
+        return {
+            "flops": fl,
+            "traffic_bytes": tb,
+            "arithmetic_intensity": fl / max(tb, 1.0),
+        }
+
+
+class CPUPlatform(Platform):
+    name = "cpu"
+
+    def __init__(self):
+        self._cache: Dict[Any, Callable] = {}
+
+    def _compiled(self, case: KernelCase, variant: Variant):
+        # builds jit their own stages: an unfused variant is a chain of
+        # separately-jitted passes (the CUDA multi-kernel-launch analogue),
+        # so the platform must NOT wrap another jit around it.
+        key = (case.name, tuple(sorted(variant.items())))
+        if key not in self._cache:
+            self._cache[key] = case.build(variant, impl="jnp")
+        return self._cache[key]
+
+    def time_variant(self, case, variant, scale, inputs, *, r, k):
+        fn = self._compiled(case, variant)
+        return wallclock(fn, inputs, r=r, k=k)
+
+
+class TPUModelPlatform(Platform):
+    """Analytic v5e roofline: t = max(flops/197T, traffic/819G) + overhead.
+
+    The per-variant traffic model is where tiling choices matter: a GEMM
+    with block (bm, bn, bk) re-reads A grid_n times and B grid_m times, so
+    bigger MXU-aligned blocks reduce the memory term — the same signal a
+    real profile would give the LLM.
+    """
+    name = "tpu-v5e-model"
+    LAUNCH_OVERHEAD_S = 2e-6
+
+    def __init__(self, peak_flops: float = hw.PEAK_FLOPS_BF16,
+                 hbm_bw: float = hw.HBM_BW):
+        self.peak_flops = peak_flops
+        self.hbm_bw = hbm_bw
+
+    def time_variant(self, case, variant, scale, inputs, *, r, k):
+        fl = case.flops(scale)
+        tb = case.generic_traffic(variant, scale)
+        # dtype strategy: fp32 accumulate with bf16 storage halves traffic
+        if variant.get("compute_dtype") == "bf16":
+            tb *= 0.5
+            fl_t = fl / self.peak_flops
+        else:
+            fl_t = fl / (self.peak_flops / 2)      # fp32 MXU rate is halved
+        mem_t = tb / self.hbm_bw
+        # misaligned tiles waste MXU lanes
+        util = variant_mxu_utilization(variant)
+        t = (max(fl_t / util, mem_t) + self.LAUNCH_OVERHEAD_S
+             + case.variant_latency(variant, scale))
+        times = [t] * max(r, 2 * k + 1)
+        return TimingResult(trimmed_mean(times, k), times, len(times), k)
+
+    def profile_feedback(self, case, variant, scale):
+        fb = super().profile_feedback(case, variant, scale)
+        fb["mxu_utilization"] = variant_mxu_utilization(variant)
+        fb["vmem_bytes"] = variant_vmem_bytes(variant)
+        lat = case.variant_latency(variant, scale)
+        roof = max(case.flops(scale) / self.peak_flops,
+                   case.generic_traffic(variant, scale) / self.hbm_bw)
+        fb["latency_s"] = lat
+        fb["latency_fraction"] = lat / max(lat + roof, 1e-12)
+        return fb
+
+
+def variant_mxu_utilization(variant: Variant) -> float:
+    """Fraction of the 128×128 MXU (and 8×128 VPU lanes) a tile fills."""
+    util = 1.0
+    for key in ("block_m", "block_n", "block_k", "block"):
+        b = variant.get(key)
+        if b is None:
+            continue
+        if b % 128 == 0:
+            continue
+        if b % 8 == 0:
+            util = min(util, max(b % 128, 8) / 128 if b < 128 else 0.9)
+        else:
+            util = min(util, 0.5)
+    return max(util, 0.05)
+
+
+def variant_vmem_bytes(variant: Variant) -> int:
+    """Working-set estimate for the BlockSpec tiles (used by AER's VMEM
+    overflow repair; v5e VMEM ≈ 128 MiB)."""
+    bm = variant.get("block_m", 128)
+    bn = variant.get("block_n", 128)
+    bk = variant.get("block_k", 128)
+    dt = 2 if variant.get("compute_dtype") == "bf16" else 4
+    return int((bm * bk + bk * bn + bm * bn) * dt)
+
+
+VMEM_BYTES = 128 * 1024 * 1024

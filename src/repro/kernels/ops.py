@@ -1,0 +1,53 @@
+"""Kernel-variant registry: the reintegration point of the MEP framework.
+
+Model code asks ``get_impl(site)`` at trace time; the MEP optimizer (or a
+config flag) installs an optimized variant with ``set_impl`` /
+``use_impl``.  This is how an MEP-optimized kernel is swapped back into the
+full application ("Integrated Speedup" in the paper) without editing model
+code or re-deriving the training step.
+
+Sites used by the models:
+  attention   (q, k, v, *, causal, softcap) -> out
+  rwkv_wkv    (r, k, v, w, u) -> out
+  ssm_chunk   (x, dt, A, B, C) -> y
+  moe_gemm    (buf, w1, w3, w2, act) -> y
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Dict, Optional
+
+_lock = threading.Lock()
+_ACTIVE: Dict[str, Callable] = {}
+
+
+def set_impl(site: str, fn: Optional[Callable]) -> None:
+    with _lock:
+        if fn is None:
+            _ACTIVE.pop(site, None)
+        else:
+            _ACTIVE[site] = fn
+
+
+def get_impl(site: str) -> Optional[Callable]:
+    return _ACTIVE.get(site)
+
+
+def clear_all() -> None:
+    with _lock:
+        _ACTIVE.clear()
+
+
+def active_sites() -> Dict[str, Callable]:
+    return dict(_ACTIVE)
+
+
+@contextlib.contextmanager
+def use_impl(site: str, fn: Callable):
+    prev = _ACTIVE.get(site)
+    set_impl(site, fn)
+    try:
+        yield
+    finally:
+        set_impl(site, prev)

@@ -1,0 +1,83 @@
+"""RWKV6 WKV recurrence as a Pallas TPU kernel.
+
+The state S [K, V] lives in VMEM scratch for the whole sequence — the chunk
+loop is the innermost ('arbitrary') grid dimension, so there are no
+HBM round-trips of the state between chunks (the XLA reference path carries
+it through scan-carry buffers instead).  Within a chunk the recurrence runs
+as an in-VMEM fori_loop; per-channel decays stay exact (no pairwise
+factorization, DESIGN.md / models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)       # [chunk, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = jnp.exp(lw_ref[0].astype(jnp.float32))
+    u = u_ref[0].astype(jnp.float32)       # [1, K] bonus row
+
+    def step(t, carry):
+        s, o = carry
+        r_t, k_t, v_t, w_t = r[t], k[t], v[t], w[t]
+        kv_t = k_t[:, None] * v_t[None, :]              # [K, V]
+        o_t = r_t @ (s + u[0][:, None] * kv_t)          # [V]
+        s = w_t[:, None] * s + kv_t
+        o = o.at[t].set(o_t)
+        return s, o
+
+    s0 = s_ref[...]
+    o0 = jnp.zeros((chunk, v.shape[1]), jnp.float32)
+    s_fin, o = jax.lax.fori_loop(0, chunk, step, (s0, o0))
+    s_ref[...] = s_fin
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def wkv_pallas(r, k, v, lw, u, *, chunk: int = 64, interpret: bool = True):
+    """r/k/v/lw [B,S,H,K]; u [H,K] → (o [B,S,H,V], final state [B,H,K,V])."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    NC = S // chunk
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, K)
+    rf, kf, vf, lwf = fold(r), fold(k), fold(v), fold(lw)
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, 1, K)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    o = pl.pallas_call(
+        kernel,
+        grid=(B * H, NC),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rf, kf, vf, lwf, uf)
+    o = o.reshape(B, H, S, V).transpose(0, 2, 1, 3)
+    # final state is recomputed cheaply outside the kernel when needed by
+    # serving (decode keeps its own state); training only needs o.
+    return o

@@ -1,0 +1,89 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Per (batch, head-block) lane the chunk loop is the innermost 'arbitrary'
+grid dim with the state [Hb, P, N] resident in VMEM.  Each chunk is the
+closed-form SSD block (pairwise scalar-decay matrix + two matmuls) — the
+MXU-friendly restructuring of the CUDA selective-scan (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(u_ref, la_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)          # [c, Hb, P]  (dt·x)
+    la_step = la_ref[0].astype(jnp.float32)   # [c, Hb]     (log decay ≤ 0)
+    Bm = b_ref[0].astype(jnp.float32)         # [c, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [c, N]
+    c, Hb, P = u.shape
+    N = Bm.shape[-1]
+
+    la = jnp.cumsum(la_step, axis=0)                         # [c, Hb]
+    dmat = la[:, None, :] - la[None, :, :]                   # [t, s, Hb]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dmat = jnp.where(mask[..., None], jnp.exp(dmat), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [t, s]
+    scores = cb[..., None] * dmat                            # [t, s, Hb]
+    y_intra = jnp.einsum("tsh,shp->thp", scores, u)
+
+    s_prev = s_ref[...]                                      # [Hb, P, N]
+    y_cross = jnp.einsum("th,tn,hpn->thp", jnp.exp(la), Cm, s_prev)
+
+    dend = jnp.exp(la[-1:, :] - la)                          # [c, Hb]
+    upd = jnp.einsum("sh,shp,sn->hpn", dend, u, Bm)
+    s_ref[...] = jnp.exp(la[-1])[:, None, None] * s_prev + upd
+    y_ref[0] = (y_intra + y_cross).astype(y_ref.dtype)
+
+
+def ssd_pallas(xh, dt, a_log, B_t, C_t, *, chunk: int = 128,
+               block_h: int = 0, interpret: bool = True):
+    """xh [B,S,H,P]; dt [B,S,H]; a_log [H]; B_t/C_t [B,S,N] → y [B,S,H,P].
+    Matches ref.ssd_ref (output only; serving keeps its own state)."""
+    Bb, S, H, P = xh.shape
+    N = B_t.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    NC = S // chunk
+    block_h = block_h or H
+    while H % block_h:
+        block_h -= 1
+    nH = H // block_h
+
+    f32 = jnp.float32
+    u = (dt.astype(f32)[..., None] * xh.astype(f32))         # [B,S,H,P]
+    la_step = -jnp.exp(a_log.astype(f32))[None, None] * dt.astype(f32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bb, nH, NC),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, P),
+                         lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, block_h), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_h, P),
+                               lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, S, H, P), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((block_h, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(u, la_step, B_t, C_t)
+    return y

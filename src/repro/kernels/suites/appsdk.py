@@ -1,0 +1,400 @@
+"""AMD APP SDK suite analog: the 8 kernels of paper Table 3.
+
+Same conventions as the PolyBench suite: naive multi-pass / gather-heavy
+baselines mirroring the SDK sample kernels; variant spaces expose fusion,
+reshape-based butterflies (no gathers), algorithm swaps, and tile shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.kernelcase import ArraySpec, KernelCase, register
+from repro.kernels.suites.pallas_lib import (elementwise_pallas,
+                                             matmul_pallas,
+                                             reduce_sum_pallas)
+
+F32 = "float32"
+
+
+def _dt(variant):
+    return jnp.bfloat16 if variant.get("compute_dtype") == "bf16" else jnp.float32
+
+
+# ------------------------------------------------------ binomialoption ----
+_STEPS = 128
+_RISK_FREE, _VOL, _T = 0.02, 0.3, 1.0
+
+
+def _binomial_ref(S0, K):
+    """European call via CRR binomial tree, batched over options."""
+    dt = _T / _STEPS
+    u = jnp.exp(_VOL * jnp.sqrt(dt))
+    d = 1.0 / u
+    p = (jnp.exp(_RISK_FREE * dt) - d) / (u - d)
+    df = jnp.exp(-_RISK_FREE * dt)
+    j = jnp.arange(_STEPS + 1, dtype=jnp.float32)
+    ST = S0[:, None] * u ** (2 * j[None, :] - _STEPS)
+    v = jnp.maximum(ST - K[:, None], 0.0)
+
+    def step(v, _):
+        v = df * (p * v[:, 1:] + (1 - p) * v[:, :-1])
+        v = jnp.pad(v, ((0, 0), (0, 1)))
+        return v, None
+
+    v, _ = lax.scan(step, v, None, length=_STEPS)
+    return v[:, 0]
+
+
+def _binomial_build(variant, impl="jnp"):
+    unroll = variant.get("unroll", 1)
+    fuse = variant.get("fuse_probs", False)
+
+    @jax.jit
+    def fn(S0, K):
+        dt = _T / _STEPS
+        u = jnp.exp(_VOL * jnp.sqrt(dt))
+        d = 1.0 / u
+        p = (jnp.exp(_RISK_FREE * dt) - d) / (u - d)
+        df = jnp.exp(-_RISK_FREE * dt)
+        pu, pd = (df * p, df * (1 - p)) if fuse else (p, 1 - p)
+        j = jnp.arange(_STEPS + 1, dtype=jnp.float32)
+        ST = S0[:, None] * u ** (2 * j[None, :] - _STEPS)
+        v = jnp.maximum(ST - K[:, None], 0.0)
+
+        def step(v, _):
+            nxt = pu * v[:, 1:] + pd * v[:, :-1]
+            if not fuse:
+                nxt = df * nxt
+            return jnp.pad(nxt, ((0, 0), (0, 1))), None
+
+        v, _ = lax.scan(step, v, None, length=_STEPS, unroll=unroll)
+        return v[:, 0]
+    return fn
+
+
+register(KernelCase(
+    name="binomialoption", suite="appsdk", family="scan",
+    ref=_binomial_ref, build=_binomial_build,
+    input_specs=lambda s: [ArraySpec((s,), F32, "uniform", 10, 100),
+                           ArraySpec((s,), F32, "uniform", 10, 100)],
+    variant_space={"unroll": [1, 2, 4, 8], "fuse_probs": [False, True]},
+    baseline_variant={"unroll": 1, "fuse_probs": False},
+    flops=lambda s: 4.0 * s * _STEPS * (_STEPS + 1) / 2,
+    latency=lambda v, s: 3e-6 * _STEPS / max(v.get("unroll", 1), 1),
+    scales=(1024, 4096, 16384, 65536)))
+
+
+# --------------------------------------------------------- bitonicsort ----
+def _bitonic_ref(x):
+    return jnp.sort(x, axis=-1)
+
+
+def _bitonic_build(variant, impl="jnp"):
+    if variant.get("use_native_sort"):
+        return jax.jit(lambda x: jnp.sort(x, axis=-1))
+
+    vectorized = variant.get("vectorized_exchange", False)
+
+    def net(x):
+        n = x.shape[-1]
+        logn = int(math.log2(n))
+        for k in range(1, logn + 1):
+            for jj in range(k - 1, -1, -1):
+                d = 1 << jj
+                if vectorized:
+                    y = x.reshape(-1, n // (2 * d), 2, d)
+                    a, b = y[..., 0, :], y[..., 1, :]
+                    idx = jnp.arange(n).reshape(n // (2 * d), 2, d)
+                    up = ((idx[..., 0, :] >> k) & 1) == 0
+                    lo = jnp.where(up, jnp.minimum(a, b), jnp.maximum(a, b))
+                    hi = jnp.where(up, jnp.maximum(a, b), jnp.minimum(a, b))
+                    x = jnp.stack([lo, hi], axis=-2).reshape(x.shape)
+                else:
+                    idx = jnp.arange(n)
+                    partner = idx ^ d
+                    px = x[..., partner]
+                    up = ((idx & (1 << k)) == 0)
+                    keep_min = (idx < partner) == up
+                    x = jnp.where(keep_min, jnp.minimum(x, px),
+                                  jnp.maximum(x, px))
+        return x
+
+    return jax.jit(net)
+
+
+register(KernelCase(
+    name="bitonicsort", suite="appsdk", family="sort",
+    ref=_bitonic_ref, build=_bitonic_build,
+    input_specs=lambda s: [ArraySpec((s,), F32)],
+    variant_space={"vectorized_exchange": [False, True],
+                   "use_native_sort": [False, True]},
+    baseline_variant={"vectorized_exchange": False, "use_native_sort": False},
+    flops=lambda s: s * math.log2(max(s, 2)) ** 2,
+    latency=lambda v, s: (5e-6 * math.log2(max(s, 2)) if v.get("use_native_sort")
+                          else 2e-6 * math.log2(max(s, 2)) ** 2
+                          * (1 if v.get("vectorized_exchange") else 3)),
+    scales=(4096, 16384, 65536, 262144)))
+
+
+# ----------------------------------------------------------- dwthaar1d ----
+_SQRT2 = math.sqrt(2.0)
+
+
+def _dwt_levels(n):
+    return int(math.log2(n))
+
+
+def _dwt_ref(x):
+    n = x.shape[0]
+    out = []
+    a = x
+    for _ in range(_dwt_levels(n)):
+        pairs = a.reshape(-1, 2)
+        a = (pairs[:, 0] + pairs[:, 1]) / _SQRT2
+        out.append((pairs[:, 0] - pairs[:, 1]) / _SQRT2)
+    return jnp.concatenate([a] + out[::-1])
+
+
+def _dwt_build(variant, impl="jnp"):
+    if variant.get("one_pass"):
+        return jax.jit(_dwt_ref)
+    # naive: one jitted pass per level (one kernel launch per level)
+    level = jax.jit(lambda a: ((a.reshape(-1, 2)[:, 0] + a.reshape(-1, 2)[:, 1]) / _SQRT2,
+                               (a.reshape(-1, 2)[:, 0] - a.reshape(-1, 2)[:, 1]) / _SQRT2))
+
+    def run(x):
+        a = x
+        out = []
+        for _ in range(_dwt_levels(x.shape[0])):
+            a, d = level(a)
+            out.append(d)
+        return jnp.concatenate([a] + out[::-1])
+    return run
+
+
+register(KernelCase(
+    name="dwthaar1d", suite="appsdk", family="stencil",
+    ref=_dwt_ref, build=_dwt_build,
+    input_specs=lambda s: [ArraySpec((s,), F32)],
+    variant_space={"one_pass": [False, True]},
+    baseline_variant={"one_pass": False},
+    flops=lambda s: 4.0 * s,
+    latency=lambda v, s: (2e-6 if v.get("one_pass") else 5e-6) * math.log2(max(s, 2)),
+    scales=(16384, 65536, 262144, 1048576)))
+
+
+# ---------------------------------------------------- fastwalshtransform --
+def _fwt_ref(x):
+    n = x.shape[0]
+    for j in range(int(math.log2(n))):
+        d = 1 << j
+        y = x.reshape(-1, 2, d)
+        x = jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]],
+                      axis=1).reshape(n)
+    return x
+
+
+def _fwt_build(variant, impl="jnp"):
+    reshape = variant.get("reshape_butterfly", False)
+    fuse = variant.get("one_pass", False)
+
+    def stage(x, j):
+        n = x.shape[0]
+        d = 1 << j
+        if reshape:
+            y = x.reshape(-1, 2, d)
+            return jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]],
+                             axis=1).reshape(n)
+        idx = jnp.arange(n)
+        partner = idx ^ d
+        px = x[partner]
+        sign = jnp.where((idx & d) == 0, 1.0, -1.0)
+        return sign * x + px
+
+    if fuse:
+        @jax.jit
+        def run(x):
+            for j in range(int(math.log2(x.shape[0]))):
+                x = stage(x, j)
+            return x
+        return run
+    stages = {}
+
+    def run(x):
+        n = x.shape[0]
+        for j in range(int(math.log2(n))):
+            if j not in stages:
+                stages[j] = jax.jit(functools.partial(stage, j=j))
+            x = stages[j](x)
+        return x
+    return run
+
+
+register(KernelCase(
+    name="fastwalshtransform", suite="appsdk", family="stencil",
+    ref=_fwt_ref, build=_fwt_build,
+    input_specs=lambda s: [ArraySpec((s,), F32)],
+    variant_space={"reshape_butterfly": [False, True],
+                   "one_pass": [False, True]},
+    baseline_variant={"reshape_butterfly": False, "one_pass": False},
+    flops=lambda s: 2.0 * s * math.log2(max(s, 2)),
+    latency=lambda v, s: (2e-6 if v.get("one_pass") else 5e-6) * math.log2(max(s, 2)),
+    scales=(16384, 65536, 262144, 1048576)))
+
+
+# ------------------------------------------------- matrixmultiplication ---
+def _mm_ref(A, B):
+    return A @ B
+
+
+def _mm_build(variant, impl="jnp"):
+    dt = _dt(variant)
+    if impl == "pallas":
+        b = dict(block_m=variant.get("block_m", 128),
+                 block_n=variant.get("block_n", 128),
+                 block_k=variant.get("block_k", 128))
+        return lambda A, B: matmul_pallas(A.astype(dt), B.astype(dt),
+                                          **b).astype(jnp.float32)
+    return jax.jit(lambda A, B: (A.astype(dt) @ B.astype(dt))
+                   .astype(jnp.float32))
+
+
+register(KernelCase(
+    name="matrixmultiplication", suite="appsdk", family="matmul",
+    ref=_mm_ref, build=_mm_build,
+    input_specs=lambda s: [ArraySpec((s, s), F32), ArraySpec((s, s), F32)],
+    variant_space={"block_m": [32, 64, 128, 256], "block_n": [32, 64, 128, 256],
+                   "block_k": [32, 64, 128, 256],
+                   "compute_dtype": ["f32", "bf16"]},
+    baseline_variant={"block_m": 32, "block_n": 32, "block_k": 32,
+                      "compute_dtype": "f32"},
+    flops=lambda s: 2.0 * s ** 3,
+    traffic=lambda v, s: 4.0 * (s * s * math.ceil(s / v.get("block_n", 32))
+                                + s * s * math.ceil(s / v.get("block_m", 32))
+                                + s * s),
+    scales=(256, 384, 512, 768, 1024)))
+
+
+# ------------------------------------------------------------ reduction ---
+def _red_ref(x):
+    return jnp.sum(x, dtype=jnp.float32)[None]
+
+
+def _red_build(variant, impl="jnp"):
+    if impl == "pallas":
+        blk = variant.get("block", 4096)
+        return lambda x: reduce_sum_pallas(x, block=blk)[None]
+    if variant.get("one_pass"):
+        return jax.jit(lambda x: jnp.sum(x, dtype=jnp.float32)[None])
+    blk = variant.get("block", 4096)
+    p1 = jax.jit(lambda x: jnp.sum(x.reshape(-1, blk), axis=1,
+                                   dtype=jnp.float32))
+    p2 = jax.jit(lambda p: jnp.sum(p, dtype=jnp.float32)[None])
+    return lambda x: p2(p1(x))
+
+
+register(KernelCase(
+    name="reduction", suite="appsdk", family="reduction",
+    ref=_red_ref, build=_red_build,
+    input_specs=lambda s: [ArraySpec((s,), F32)],
+    variant_space={"one_pass": [False, True], "block": [1024, 4096, 16384]},
+    baseline_variant={"one_pass": False, "block": 1024},
+    flops=lambda s: float(s),
+    traffic=lambda v, s: (4.0 if v.get("one_pass") else 4.0 + 8.0 / max(
+        v.get("block", 1024), 1)) * s,
+    scales=(65536, 262144, 1048576, 4194304)))
+
+
+# ---------------------------------------------------- simpleconvolution ---
+_MASK = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.float32) / 16.0
+
+
+def _conv_ref(img):
+    pad = jnp.pad(img, 1)
+    out = jnp.zeros_like(img)
+    for di in range(3):
+        for dj in range(3):
+            out = out + _MASK[di, dj] * pad[di:di + img.shape[0],
+                                            dj:dj + img.shape[1]]
+    return out
+
+
+def _conv_build(variant, impl="jnp"):
+    method = variant.get("method", "xla_conv")
+    if method == "shifts" or impl == "pallas":
+        @jax.jit
+        def shifts(img):
+            pad = jnp.pad(img, 1)
+            out = jnp.zeros_like(img)
+            for di in range(3):
+                for dj in range(3):
+                    out = out + _MASK[di, dj] * pad[di:di + img.shape[0],
+                                                    dj:dj + img.shape[1]]
+            return out
+        return shifts
+    if method == "separable":
+        # the Gaussian mask is rank-1: [1,2,1]/4 ⊗ [1,2,1]/4
+        k1 = jnp.asarray([1.0, 2.0, 1.0]) / 4.0
+
+        @jax.jit
+        def sep(img):
+            pad = jnp.pad(img, ((1, 1), (0, 0)))
+            v = (k1[0] * pad[:-2] + k1[1] * pad[1:-1] + k1[2] * pad[2:])
+            pad2 = jnp.pad(v, ((0, 0), (1, 1)))
+            return (k1[0] * pad2[:, :-2] + k1[1] * pad2[:, 1:-1]
+                    + k1[2] * pad2[:, 2:])
+        return sep
+    # baseline: general conv through lax.conv (im2col-ish general path)
+    @jax.jit
+    def conv(img):
+        x = img[None, None]
+        w = jnp.asarray(_MASK)[None, None]
+        return lax.conv(x, w, (1, 1), "SAME")[0, 0]
+    return conv
+
+
+register(KernelCase(
+    name="simpleconvolution", suite="appsdk", family="stencil",
+    ref=_conv_ref, build=_conv_build,
+    input_specs=lambda s: [ArraySpec((s, s), F32)],
+    variant_space={"method": ["xla_conv", "shifts", "separable"]},
+    baseline_variant={"method": "xla_conv"},
+    flops=lambda s: 18.0 * s * s,
+    traffic=lambda v, s: (3 if v.get("method") == "separable" else 4) * 4.0 * s * s,
+    scales=(512, 1024, 2048, 4096)))
+
+
+# ------------------------------------------------------------ vectoradd ---
+def _vadd_ref(a, b):
+    return a + b
+
+
+def _vadd_build(variant, impl="jnp"):
+    if impl == "pallas":
+        blk = variant.get("block", 8192)
+        return lambda a, b: elementwise_pallas(lambda x, y: x + y, a, b,
+                                               block=blk)
+    if variant.get("one_pass"):
+        return jax.jit(lambda a, b: a + b)
+    # SDK sample stages through intermediate buffers (extra passes)
+    p1 = jax.jit(lambda a: a * 1.0)
+    p2 = jax.jit(lambda b: b * 1.0)
+    p3 = jax.jit(lambda x, y: x + y)
+    return lambda a, b: p3(p1(a), p2(b))
+
+
+register(KernelCase(
+    name="vectoradd", suite="appsdk", family="elementwise",
+    ref=_vadd_ref, build=_vadd_build,
+    input_specs=lambda s: [ArraySpec((s,), F32), ArraySpec((s,), F32)],
+    variant_space={"one_pass": [False, True], "block": [4096, 8192, 16384]},
+    baseline_variant={"one_pass": False, "block": 4096},
+    flops=lambda s: float(s),
+    traffic=lambda v, s: (3.0 if v.get("one_pass") else 7.0) * 4.0 * s,
+    scales=(262144, 1048576, 4194304, 16777216)))

@@ -1,0 +1,132 @@
+"""Shared Pallas builders for the benchmark suites: tiled matmul with
+epilogue fusion, blocked reduction, 1-D map.  Each takes variant-style
+block parameters and runs in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fit(b: int, dim: int) -> int:
+    b = max(1, min(b, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k, epilogue, alpha, beta,
+               c_ref=None):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        acc = acc_ref[...]
+        if epilogue == "alpha_beta":
+            acc = alpha * acc + beta * c_ref[...].astype(jnp.float32)
+        elif epilogue == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul_pallas(a, b, c=None, *, block_m=128, block_n=128, block_k=128,
+                  epilogue: str = "none", alpha: float = 1.0,
+                  beta: float = 1.0, interpret: bool = True):
+    """O = epilogue(A @ B [, C]) with an fp32 VMEM accumulator."""
+    M, K = a.shape
+    N = b.shape[1]
+    bm, bn, bk = _fit(block_m, M), _fit(block_n, N), _fit(block_k, K)
+    n_k = K // bk
+    kernel = functools.partial(_mm_kernel, n_k=n_k, epilogue=epilogue,
+                               alpha=alpha, beta=beta)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+        pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+    ]
+    args = [a, b]
+    if epilogue == "alpha_beta":
+        def kernel2(a_ref, b_ref, c_ref, o_ref, acc_ref):
+            _mm_kernel(a_ref, b_ref, o_ref, acc_ref, n_k=n_k,
+                       epilogue=epilogue, alpha=alpha, beta=beta, c_ref=c_ref)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)))
+        args.append(c)
+        body = kernel2
+    else:
+        body = kernel
+    return pl.pallas_call(
+        body,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+
+
+def _reduce_kernel(x_ref, o_ref, acc_ref, *, n_blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(x_ref[...].astype(jnp.float32))
+
+    @pl.when(i == n_blocks - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def reduce_sum_pallas(x, *, block: int = 4096, interpret: bool = True):
+    n = x.shape[0]
+    blk = _fit(block, n)
+    kernel = functools.partial(_reduce_kernel, n_blocks=n // blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        scratch_shapes=[pltpu.VMEM((), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x)[0]
+
+
+def _map_kernel(fn, *refs):
+    *in_refs, o_ref = refs
+    o_ref[...] = fn(*[r[...] for r in in_refs]).astype(o_ref.dtype)
+
+
+def elementwise_pallas(fn, *arrays, block: int = 8192,
+                       interpret: bool = True):
+    """1-D fused map kernel: o = fn(*arrays)."""
+    n = arrays[0].shape[0]
+    blk = _fit(block, n)
+    body = functools.partial(_map_kernel, fn)
+    return pl.pallas_call(
+        body,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)) for _ in arrays],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), arrays[0].dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*arrays)

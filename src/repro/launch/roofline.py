@@ -1,0 +1,189 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+compute_s    = HLO_FLOPs(per chip) / 197e12
+memory_s     = HLO_bytes(per chip) / 819e9
+collective_s = collective_bytes(per chip) / 50e9
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* flops
+and bytes.  Collective bytes are NOT in cost_analysis — we parse the
+compiled HLO text and sum operand/result sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (ring-model
+per-device traffic: ag→result, ar→2×operand, rs→operand, a2a→operand,
+cp→result; async `-start` forms counted once, `-done` ignored).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import mesh as hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)", re.M)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    ops: List[Tuple[str, int]] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic under a ring model."""
+    st = CollectiveStats()
+    for m in _COLL_RE.finditer(hlo_text):
+        result_shape, kind, _start, operands = m.group(1), m.group(2), m.group(3), m.group(4)
+        rbytes = shape_bytes(result_shape)
+        obytes = shape_bytes(operands)
+        if kind == "all-gather":
+            b = rbytes
+        elif kind == "all-reduce":
+            b = 2 * obytes
+        elif kind == "reduce-scatter":
+            b = obytes
+        elif kind == "all-to-all":
+            b = obytes
+        else:  # collective-permute
+            b = rbytes
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+        st.ops.append((kind, b))
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float           # ideal-fusion (compulsory) HBM traffic
+    collective_bytes_per_chip: float
+    n_chips: int
+    model_flops_total: float        # 6·N·D (active params)
+    collectives: Optional[CollectiveStats] = None
+    bytes_per_chip_upper: float = 0.0  # CPU-fusion-granularity upper bound
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / hw.HBM_BW
+
+    @property
+    def memory_s_upper(self) -> float:
+        return self.bytes_per_chip_upper / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline lower bound on step time (terms fully overlapped)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_chip * self.n_chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def model_flops_utilization(self) -> float:
+        """MFU at the roofline bound (the score we hillclimb)."""
+        peak = self.n_chips * hw.PEAK_FLOPS_BF16
+        return (self.model_flops_total / peak) / self.step_s if self.step_s else 0.0
+
+    def to_dict(self) -> Dict:
+        d = {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "bytes_per_chip_upper": self.bytes_per_chip_upper,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "n_chips": self.n_chips,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_s_upper": self.memory_s_upper,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.model_flops_utilization,
+        }
+        if self.collectives is not None:
+            d["collective_bytes_by_kind"] = self.collectives.bytes_by_kind
+            d["collective_count_by_kind"] = self.collectives.count_by_kind
+        return d
+
+
+def from_compiled(compiled, *, n_chips: int, model_flops_total: float,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Derive terms with the while-aware HLO walker (hlo_cost).  XLA's
+    cost_analysis() counts while bodies once, so scan-over-layers modules
+    would be ~n_layers× under-counted; the walker multiplies loop bodies by
+    their known_trip_count (validated against cost_analysis on scan-free
+    modules in tests/test_hlo_cost.py)."""
+    from repro.launch import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # f32_bytes=2: undo XLA:CPU's bf16→f32 legalization (see hlo_cost)
+    cost = hlo_cost.analyze(text, f32_bytes=2)
+    st = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in cost.coll_bytes.items()},
+        count_by_kind={k: int(v) for k, v in cost.coll_count.items()})
+    return Roofline(flops_per_chip=cost.flops,
+                    bytes_per_chip=cost.hbm_bytes_ideal,
+                    collective_bytes_per_chip=cost.collective_bytes,
+                    n_chips=n_chips, model_flops_total=model_flops_total,
+                    collectives=st, bytes_per_chip_upper=cost.hbm_bytes)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (D = tokens processed per step)."""
+    _, active = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens += shape.global_batch * cfg.encoder.n_frames
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens += shape.global_batch * cfg.encoder.n_frames
+        return 2.0 * active * tokens          # forward only
+    # decode: one token per sequence, forward only
+    return 2.0 * active * shape.global_batch

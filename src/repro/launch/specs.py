@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape, model, ctx)`` returns (args, in_shardings,
+out_shardings, donate, fn) for the step the cell lowers — weak-type-correct,
+shardable, and never allocating device memory.  The [audio]/[vlm] modality
+frontends are stubs: whisper's ``frames`` entry is the precomputed frame
+embedding, chameleon's VQ image tokens are ordinary vocab ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.sharding.ctx import ShardCtx, map_axes
+from repro.train import optim
+from repro.train.optim import AdamWConfig
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+# grad-accumulation microbatch counts for the train_4k cells (memory fit;
+# recorded per-cell in EXPERIMENTS.md §Dry-run)
+TRAIN_ACCUM: Dict[str, int] = {
+    "glm4-9b": 2, "codeqwen1.5-7b": 2, "stablelm-3b": 1,
+    "command-r-35b": 8, "hymba-1.5b": 1, "dbrx-132b": 4,
+    "qwen2-moe-a2.7b": 1, "chameleon-34b": 4, "whisper-medium": 1,
+    "rwkv6-7b": 2,
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int, ctx: ShardCtx):
+    args: Dict[str, Any] = {
+        "tokens": sds((B, S), jnp.int32),
+        "targets": sds((B, S), jnp.int32),
+    }
+    sh = {
+        "tokens": ctx.sharding(("batch", None), (B, S)),
+        "targets": ctx.sharding(("batch", None), (B, S)),
+    }
+    if cfg.family == "encdec":
+        F, d = cfg.encoder.n_frames, cfg.d_model
+        args["frames"] = sds((B, F, d), jnp.bfloat16)
+        sh["frames"] = ctx.sharding(("batch", None, None), (B, F, d))
+    return args, sh
+
+
+def param_specs(model, ctx: ShardCtx):
+    params_abs = model.abstract_params()
+    axes = model.param_axes()
+    p_sh = ctx.tree_shardings(axes, params_abs)
+    return params_abs, axes, p_sh
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, model, ctx: ShardCtx, *,
+                accum: Optional[int] = None,
+                opt_cfg: Optional[AdamWConfig] = None,
+                grad_hook=None):
+    """Returns (fn, args, in_shardings, out_shardings, donate_argnums)."""
+    B, S = shape.global_batch, shape.seq_len
+    params_abs, axes, p_sh = param_specs(model, ctx)
+
+    if shape.kind == "train":
+        accum = accum if accum is not None else TRAIN_ACCUM.get(cfg.name, 1)
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_abs = jax.eval_shape(optim.init_state, params_abs)
+        opt_sh = ctx.tree_shardings(optim.state_axes(axes), opt_abs)
+        batch_abs, batch_sh = batch_specs(cfg, B, S, ctx)
+        fn = make_train_step(model, opt_cfg, accum=accum, grad_hook=grad_hook,
+                             grad_shardings=p_sh)
+        args = (params_abs, opt_abs, batch_abs)
+        in_sh = (p_sh, opt_sh, batch_sh)
+        out_sh = (p_sh, opt_sh, None)
+        return fn, args, in_sh, out_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        tok = sds((B, S), jnp.int32)
+        tok_sh = ctx.sharding(("batch", None), (B, S))
+        # pin the produced KV cache to its serving layout (kv_seq rule) so
+        # prefill doesn't gather the cache to replicated at the output
+        cache_abs = model.cache_shapes(B, S)
+        cache_sh = ctx.tree_shardings(model.cache_axes(), cache_abs)
+        out_sh = (None, cache_sh)
+        if cfg.family == "encdec":
+            F, d = cfg.encoder.n_frames, cfg.d_model
+            args = (params_abs, tok, sds((B, F, d), jnp.bfloat16))
+            in_sh = (p_sh, tok_sh, ctx.sharding(("batch", None, None), (B, F, d)))
+        else:
+            args = (params_abs, tok)
+            in_sh = (p_sh, tok_sh)
+        return fn, args, in_sh, out_sh, ()
+
+    # decode / long_decode: one new token vs a cache of length S
+    fn = make_serve_step(model)
+    cache_abs = model.cache_shapes(B, S)
+    cache_axes = model.cache_axes()
+    cache_sh = ctx.tree_shardings(cache_axes, cache_abs)
+    tok = sds((B, 1), jnp.int32)
+    args = (params_abs, cache_abs, tok, sds((), jnp.int32))
+    in_sh = (p_sh, cache_sh,
+             ctx.sharding(("batch", None), (B, 1)), ctx.sharding((), ()))
+    out_sh = (None, cache_sh)
+    return fn, args, in_sh, out_sh, (1,)

@@ -1,0 +1,17 @@
+"""Model factory: arch config → model instance."""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import ShardCtx
+from repro.models.lm import LM
+from repro.models.whisper import EncDecLM
+
+Model = Union[LM, EncDecLM]
+
+
+def get_model(cfg: ModelConfig, ctx: Optional[ShardCtx] = None, **kw) -> Model:
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, ctx, **kw)
+    return LM(cfg, ctx, **kw)

@@ -1,0 +1,506 @@
+"""Core transformer layers: norms, RoPE, chunked/decode attention, MLP, MoE.
+
+All functions are pure and mesh-agnostic: sharding enters only through the
+``ShardCtx`` constraints, and compute hot-spots consult the kernel-variant
+registry (``repro.kernels.ops``) so MEP-optimized Pallas variants can be
+swapped in (the paper's "reintegration" step) without touching model code.
+
+Shapes follow [batch, seq, heads, head_dim]; softmax/norm statistics are
+computed in fp32 regardless of the activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import ShardCtx
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# param-spec machinery: one table drives both init and logical axes
+# --------------------------------------------------------------------------
+def init_from_spec(key: jax.Array, spec: Dict[str, Tuple[Tuple[int, ...], Tuple]],
+                   dtype) -> Dict[str, jax.Array]:
+    params = {}
+    for i, (name, (shape, _axes)) in enumerate(sorted(spec.items())):
+        k = jax.random.fold_in(key, i)
+        if name.startswith("ln") or name.endswith("_scale"):
+            params[name] = jnp.ones(shape, dtype)
+        elif name.startswith("b") or name.endswith("_bias"):
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            params[name] = (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+    return params
+
+
+def axes_from_spec(spec) -> Dict[str, Tuple]:
+    return {name: axes for name, (shape, axes) in spec.items()}
+
+
+# --------------------------------------------------------------------------
+# norms and activations
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (partial-rotary aware)
+# --------------------------------------------------------------------------
+def rope(x, positions, theta: float, partial: float = 1.0):
+    """x: [B, S, H, hd]; positions: [B, S] (or [S]) int32."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * partial)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = jnp.arange(0, rot, 2, dtype=jnp.float32) / rot
+    inv = theta ** -freqs                                  # [rot/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None] * inv[None, None, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention parameter spec
+# --------------------------------------------------------------------------
+def attn_param_spec(cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    spec = {
+        "wq": ((d, cfg.q_dim), ("d_model", "heads")),
+        "wk": ((d, cfg.kv_dim), ("d_model", "kv_heads")),
+        "wv": ((d, cfg.kv_dim), ("d_model", "kv_heads")),
+        "wo": ((cfg.q_dim, d), ("heads", "d_model")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ((cfg.q_dim,), ("heads",))
+        spec["bk"] = ((cfg.kv_dim,), ("kv_heads",))
+        spec["bv"] = ((cfg.kv_dim,), ("kv_heads",))
+    if cfg.qk_norm:
+        spec["q_scale"] = ((hd,), (None,))
+        spec["k_scale"] = ((hd,), (None,))
+    return spec
+
+
+def _project_qkv(x, p, cfg: ModelConfig, ctx: ShardCtx, positions, x_kv=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    xk = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", xk, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", xk, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, xk.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, xk.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+        kpos = positions if x_kv is None else jnp.arange(xk.shape[1])
+        k = rope(k, kpos, cfg.rope_theta, cfg.partial_rotary)
+    if ctx.attn_impl == "cp" and q.shape[1] > 1:
+        # context parallel: everything stays sequence-sharded; the cp
+        # attention wrapper gathers K/V itself
+        q = ctx.constrain(q, "batch", "seq", None, None)
+        k = ctx.constrain(k, "batch", "seq", None, None)
+        v = ctx.constrain(v, "batch", "seq", None, None)
+    else:
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        k = ctx.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# chunked attention (train / prefill XLA reference path)
+# --------------------------------------------------------------------------
+def attention_chunked(q, k, v, *, causal: bool, ctx: ShardCtx,
+                      q_chunk: int = 256, softcap: float = 0.0,
+                      q_offset=0, use_impl: bool = True):
+    """Flash-style q-chunked attention: O(S·chunk) score memory.
+
+    This is the XLA reference lowering; when a Pallas flash-attention
+    variant is activated in the kernel registry it takes over (TPU path).
+    ``q_offset`` shifts the causal mask for context-parallel shards.
+    """
+    if use_impl:
+        from repro.kernels import ops  # late import: kernels are optional
+        impl = ops.get_impl("attention")
+        if impl is not None:
+            return impl(q, k, v, causal=causal, softcap=softcap)
+
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    while S % q_chunk:        # non-divisible seq (whisper's 1500 frames):
+        q_chunk -= 1          # largest divisor ≤ requested chunk
+    n_chunk = S // q_chunk
+    qc = q.reshape(B, n_chunk, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(T)
+
+    def one_chunk(start_idx, qb):
+        # qb: [B, c, KV, G, hd]
+        s = jnp.einsum("bckgh,btkh->bkgct", qb, k).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            qpos = q_offset + start_idx * q_chunk + jnp.arange(q_chunk)
+            mask = kpos[None, :] <= qpos[:, None]          # [c, t]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgct,btkh->bckgh", p, v)
+
+    # chunk index lives in the scan *carry* so the causal mask is computed
+    # in-loop rather than hoisted into an O(S²) precomputed buffer
+    def scan_body(idx, qb):
+        return idx + 1, one_chunk(idx, qb)
+
+    _, outs = lax.scan(scan_body, jnp.zeros((), jnp.int32), qc)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return ctx.constrain(out, "batch", None, "heads", None)
+
+
+def attention_context_parallel(q, k, v, *, ctx: ShardCtx, q_chunk: int = 256,
+                               softcap: float = 0.0):
+    """Context-parallel causal attention: q stays sequence-sharded on the
+    model axis; K/V (small under GQA) are all-gathered inside a shard_map
+    and each shard attends its own query chunk with a shifted causal mask.
+    Collective cost per layer = 2·|K,V| instead of 2·|residual| — the §Perf
+    winner for GQA prefill (EXPERIMENTS.md §Perf)."""
+    if not ctx.enabled:
+        return attention_chunked(q, k, v, causal=True, ctx=ctx,
+                                 q_chunk=q_chunk, softcap=softcap)
+    from jax.sharding import PartitionSpec as P
+    tp = ctx.tp
+    n = ctx.axis_size(tp)
+    B, S, H, hd = q.shape
+    assert S % n == 0, (S, n)
+    null = ShardCtx.null()
+
+    def local(ql, kl, vl):
+        kf = lax.all_gather(kl, tp, axis=1, tiled=True)
+        vf = lax.all_gather(vl, tp, axis=1, tiled=True)
+        off = lax.axis_index(tp) * (S // n)
+        return attention_chunked(ql, kf, vf, causal=True, ctx=null,
+                                 q_chunk=min(q_chunk, S // n),
+                                 softcap=softcap, q_offset=off)
+
+    spec = P(ctx.dp, tp, None, None)
+    return jax.shard_map(local, mesh=ctx.mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)
+
+
+# ---- int8 KV-cache quantization (per-position, per-kv-head scales) ------
+def kv_quantize(x):
+    """x [..., hd] → (int8 values, bf16 scales [..., 1])."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def kv_dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def attention_decode(q, k_cache, v_cache, length: Optional[jax.Array] = None,
+                     softcap: float = 0.0, k_scale=None, v_scale=None):
+    """Single-token decode: q [B, 1, H, hd] vs caches [B, T, KV, hd]
+    (optionally int8 with per-position scales)."""
+    if k_scale is not None:
+        k_cache = kv_dequantize(k_cache, k_scale)
+        v_cache = kv_dequantize(v_cache, v_scale)
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qh, k_cache).astype(jnp.float32) * scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    if length is not None:
+        valid = jnp.arange(T)[None, :] < length[:, None]    # [B, T]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def flash_decode_sharded(q, k_cache, v_cache, ctx: ShardCtx,
+                         length: Optional[jax.Array] = None, *,
+                         seq_axes=None, batch_axes=(), k_scale=None,
+                         v_scale=None):
+    """Distributed flash-decode: the KV cache sequence dim is sharded over
+    ``seq_axes``; each shard computes partial attention and the shards are
+    combined with a log-sum-exp reduction (shard_map + psum).
+
+    Two production uses:
+      * long_500k — batch 1, seq over the data axes (seq_axes=ctx.dp)
+      * decode_32k — batch over dp, seq over the model axis
+        (batch_axes=ctx.dp, seq_axes=('model',)) so the cache fits HBM even
+        when GQA head counts don't divide the TP degree."""
+    if not ctx.enabled:
+        return attention_decode(q, k_cache, v_cache, length)
+    seq_axes = tuple(seq_axes if seq_axes is not None else ctx.dp)
+    batch_axes = tuple(batch_axes)
+
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    T = k_cache.shape[1]
+    n_seq = ctx.axis_size(seq_axes)
+    assert T % n_seq == 0, (T, seq_axes)
+
+    def local(qh, kl, vl, lens, ks, vs):
+        # qh [b,KV,G,hd]; kl/vl [b, T/n, KV, hd]; all batch-local shards;
+        # int8 caches are dequantized per shard (tiny vs the full cache)
+        if ks is not None:
+            kl = kv_dequantize(kl, ks)
+            vl = kv_dequantize(vl, vs)
+        tl = kl.shape[1]
+        shard = jnp.zeros((), jnp.int32)
+        for ax in seq_axes:
+            shard = shard * ctx.mesh.shape[ax] + lax.axis_index(ax)
+        kpos = shard * tl + jnp.arange(tl)
+        s = jnp.einsum("bkgh,btkh->bkgt", qh, kl).astype(jnp.float32) * scale
+        if lens is not None:
+            valid = kpos[None, :] < lens[:, None]
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)                               # [b,KV,G]
+        e = jnp.exp(s - m[..., None])
+        num = jnp.einsum("bkgt,btkh->bkgh", e, vl.astype(jnp.float32))
+        den = jnp.sum(e, axis=-1)                             # [b,KV,G]
+        m_all = lax.pmax(m, seq_axes)
+        c = jnp.exp(m - m_all)
+        num = lax.psum(num * c[..., None], seq_axes)
+        den = lax.psum(den * c, seq_axes)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+
+    qh = q.reshape(B, KV, G, hd)
+    from jax.sharding import PartitionSpec as P
+    bspec = batch_axes if batch_axes else None
+    q_spec = P(bspec, None, None, None) if bspec else P()
+    kv_spec = P(bspec, seq_axes, None, None)
+    len_spec = P(bspec) if bspec else P()
+    if k_scale is None:
+        fn = lambda qh, kl, vl, lens: local(qh, kl, vl, lens, None, None)
+        out = jax.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, len_spec),
+            out_specs=q_spec, check_vma=False,
+        )(qh, k_cache, v_cache, length)
+    else:
+        out = jax.shard_map(
+            local, mesh=ctx.mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, len_spec, kv_spec, kv_spec),
+            out_specs=q_spec, check_vma=False,
+        )(qh, k_cache, v_cache, length, k_scale, v_scale)
+    return out.reshape(B, 1, H, hd)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_param_spec(cfg: ModelConfig, d_ff: Optional[int] = None,
+                   ffn_axis: str = "ffn"):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    spec = {
+        "w1": ((d, f), ("d_model", ffn_axis)),
+        "w2": ((f, d), (ffn_axis, "d_model")),
+    }
+    if cfg.act == "swiglu":
+        spec["w3"] = ((d, f), ("d_model", ffn_axis))
+    if cfg.mlp_bias:
+        spec["b1"] = ((f,), (ffn_axis,))
+        spec["b2"] = ((d,), ("d_model",))
+    return spec
+
+
+def mlp(x, p, cfg: ModelConfig, ctx: ShardCtx):
+    a = act_fn(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    if cfg.mlp_bias:
+        h = h + p["b1"]
+    h = a(h)
+    if cfg.act == "swiglu":
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    if ctx.attn_impl == "cp":
+        h = ctx.constrain(h, "batch", "seq", None)   # tokens stay sharded
+    else:
+        h = ctx.constrain(h, "batch", None, "ffn")   # Megatron TP
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    if cfg.mlp_bias:
+        out = out + p["b2"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (capacity-based per-sequence local dispatch)
+# --------------------------------------------------------------------------
+def moe_param_spec(cfg: ModelConfig):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    spec = {
+        "router": ((d, m.n_experts), ("d_model", "experts")),
+        "we1": ((m.n_experts, d, fe), ("experts", "d_model", "expert_ffn")),
+        "we2": ((m.n_experts, fe, d), ("experts", "expert_ffn", "d_model")),
+        "we3": ((m.n_experts, d, fe), ("experts", "d_model", "expert_ffn")),
+    }
+    if m.n_shared:
+        spec.update({
+            "ws1": ((d, m.d_ff_shared), ("d_model", "ffn")),
+            "ws2": ((m.d_ff_shared, d), ("ffn", "d_model")),
+            "ws3": ((d, m.d_ff_shared), ("d_model", "ffn")),
+            "ws_gate": ((d, 1), ("d_model", None)),
+        })
+    return spec
+
+
+def _moe_capacity(S: int, m) -> int:
+    c = int(math.ceil(S * m.top_k * m.capacity_factor / m.n_experts))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_block(x, p, cfg: ModelConfig, ctx: ShardCtx):
+    """x: [B, S, d].  Tokens are routed within their own sequence (B stays on
+    the data axes, so dispatch is communication-free); experts run as one
+    grouped einsum with the expert-ffn dim on the TP axis."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    a = act_fn(cfg.act)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, K)                      # [B,S,K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    gate = gate.astype(x.dtype)
+
+    if S == 1:
+        # decode: all-expert dense compute then weighted combine
+        h = jnp.einsum("bsd,edf->bsef", x, p["we1"])
+        h = a(h) * jnp.einsum("bsd,edf->bsef", x, p["we3"])
+        ye = jnp.einsum("bsef,efd->bsed", h, p["we2"])    # [B,1,E,d]
+        w = jnp.sum(jax.nn.one_hot(eidx, E, dtype=x.dtype) * gate[..., None],
+                    axis=2)                                # [B,S,E]
+        out = jnp.einsum("bsed,bse->bsd", ye, w)
+    else:
+        C = _moe_capacity(S, m)
+        ef = jnp.reshape(eidx, (B, S * K))                 # [B,T]
+        gf = jnp.reshape(gate, (B, S * K))
+        onehot = jax.nn.one_hot(ef, E, dtype=jnp.int32)    # [B,T,E]
+        pos = jnp.cumsum(onehot, axis=1) - onehot          # pos within expert
+        pos = jnp.sum(pos * onehot, axis=-1)               # [B,T]
+        keep = (pos < C).astype(x.dtype)
+        xk = jnp.repeat(x, K, axis=1)                      # token s -> slots s*K+j
+        pos_c = jnp.minimum(pos, C - 1)
+
+        def scatter_one(buf, e_i, p_i, vals):
+            return buf.at[e_i, p_i].add(vals)
+
+        buf = jax.vmap(scatter_one)(
+            jnp.zeros((B, E, C, d), x.dtype), ef, pos_c, xk * keep[..., None])
+
+        def gather_one(y, e_i, p_i):
+            return y[e_i, p_i]
+
+        def expert_ffn_combine(buf_l, w1, w3, w2, ef_l, pos_l, g_l):
+            h = jnp.einsum("becd,edf->becf", buf_l, w1)
+            h = a(h) * jnp.einsum("becd,edf->becf", buf_l, w3)
+            ye = jnp.einsum("becf,efd->becd", h, w2)       # [b,E,C,d]
+            yk = jax.vmap(gather_one)(ye, ef_l, pos_l) * g_l[..., None]
+            return jnp.sum(yk.reshape(yk.shape[0], -1, K, d), axis=2)
+
+        gk = gf * keep
+        if ctx.moe_impl == "shard_map" and ctx.enabled:
+            # combine-before-reduce: the expert-ffn output stays a PARTIAL
+            # sum over the tp-sharded expert-ffn dim; gathering per-token
+            # slots first means the psum moves [B,S,d] instead of the
+            # k·capacity× bigger [B,E,C,d] (§Perf, dbrx train)
+            from jax.sharding import PartitionSpec as P
+            tp = ctx.tp
+
+            def local(buf_l, w1, w3, w2, ef_l, pos_l, g_l):
+                out_p = expert_ffn_combine(buf_l, w1, w3, w2, ef_l, pos_l,
+                                           g_l)
+                return lax.psum(out_p, tp)
+
+            dp = ctx.dp
+            wspec = P(None, None, tp)
+            out = jax.shard_map(
+                local, mesh=ctx.mesh,
+                in_specs=(P(dp, None, None, None), wspec, wspec,
+                          P(None, tp, None), P(dp, None), P(dp, None),
+                          P(dp, None)),
+                out_specs=P(dp, None, None), check_vma=False,
+            )(buf, p["we1"], p["we3"], p["we2"], ef, pos_c, gk)
+        else:
+            buf = ctx.constrain(buf, "batch", "experts", None, None)
+            out = expert_ffn_combine(buf, p["we1"], p["we3"], p["we2"],
+                                     ef, pos_c, gk)
+
+    if m.n_shared:
+        h = a(jnp.einsum("bsd,df->bsf", x, p["ws1"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["ws3"])
+        sh = jnp.einsum("bsf,fd->bsd", h, p["ws2"])
+        sgate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dg->bsg", x, p["ws_gate"]).astype(jnp.float32))
+        out = out + sh * sgate.astype(x.dtype)
+    return ctx.constrain(out, "batch", "seq", None)
+
+
+def moe_aux_loss(x, p, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = lax.top_k(probs, m.top_k)
+    frac = jnp.mean(jax.nn.one_hot(eidx, m.n_experts, dtype=jnp.float32), axis=(0, 1, 2))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return m.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,366 @@
+"""State-space blocks: Mamba-2-style SSD heads (hymba) and RWKV6 (Finch).
+
+Both use exact chunked linear-recurrence algorithms:
+
+* Mamba SSD: per-head *scalar* decay, so the intra-chunk term is a pairwise
+  decay matrix ``exp(la_t - la_s)`` (t≥s ⇒ always ≤1, numerically safe) and
+  everything is matmuls; inter-chunk state is a short ``lax.scan`` over
+  chunks.  This is the TPU-native restructuring of the CUDA selective-scan.
+
+* RWKV6: per-*channel* data-dependent decay, which cannot be factored into a
+  stable pairwise matmul; instead the intra-chunk recurrence runs as a short
+  sequential scan *vectorized across all chunks* (depth = chunk length, not
+  sequence length), followed by the same inter-chunk scan and a closed-form
+  cross term ``r_t ⊙ exp(lw_exclusive) · S_start``.  Exact, no decay clamp.
+
+Decode steps carry O(1) recurrent state — this is why rwkv6/hymba own the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import ShardCtx
+from repro.models.layers import act_fn, rms_norm
+
+
+# ==========================================================================
+# Mamba-2-style SSD (hymba's mamba heads)
+# ==========================================================================
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    p = s.head_dim
+    n_heads = d_in // p
+    return d_in, n_heads, p
+
+
+def mamba_param_spec(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, hm, p = mamba_dims(cfg)
+    n = s.state_dim
+    return {
+        "w_in": ((d, 2 * d_in), ("d_model", "ffn")),
+        "conv_w": ((s.conv_dim, d_in), ("conv", "ffn")),
+        "conv_bias": ((d_in,), ("ffn",)),
+        "w_bc": ((d_in, 2 * n), ("ffn", "state")),
+        "w_dt": ((d_in, hm), ("ffn", "heads")),
+        "dt_bias": ((hm,), ("heads",)),
+        "a_log": ((hm,), ("heads",)),
+        "d_skip": ((hm,), ("heads",)),
+        "ln_y": ((d_in,), ("ffn",)),
+        "w_out": ((d_in, d), ("ffn", "d_model")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: x [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunked(xh, dt, a_log, B_t, C_t, chunk: int, use_impl: bool = True):
+    """Exact SSD over chunks.
+
+    xh [B,S,H,P] inputs per head; dt [B,S,H] (post-softplus); a_log [H] (>0);
+    B_t, C_t [B,S,N].  Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    if use_impl:
+        from repro.kernels import ops
+        impl = ops.get_impl("ssm_chunk")
+        if impl is not None:
+            out = impl(xh, dt, a_log, B_t, C_t, chunk=chunk)
+            if isinstance(out, tuple):
+                return out
+            # stateless impl (training forward only): state is dead code
+            # under mode='par' and DCE'd; prefill must not install these
+            Bb, _, H, P = xh.shape
+            return out, jnp.zeros((Bb, H, P, B_t.shape[-1]), jnp.float32)
+
+    Bb, S, H, P = xh.shape
+    N = B_t.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    NC = S // c
+    f32 = jnp.float32
+    la_step = (-jnp.exp(a_log.astype(f32)) * dt.astype(f32))       # [B,S,H] ≤ 0
+    u = (dt.astype(f32)[..., None] * xh.astype(f32))               # [B,S,H,P]
+
+    rs = lambda t, last: t.reshape((Bb, NC, c) + t.shape[2:]) if last else t
+    la = jnp.cumsum(rs(la_step, True), axis=2)                     # incl. cumsum
+    Bc, Cc, uc = rs(B_t.astype(f32), True), rs(C_t.astype(f32), True), rs(u, True)
+
+    # intra-chunk: scores[t,s] = (C_t·B_s)·exp(la_t - la_s), s ≤ t
+    dmat = la[:, :, :, None, :] - la[:, :, None, :, :]             # [B,NC,t,s,H]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], jnp.exp(dmat), 0.0)
+    cb = jnp.einsum("bntx,bnsx->bnts", Cc, Bc)                     # [B,NC,t,s]
+    y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", cb, dmat, uc)
+
+    # per-chunk state contribution: U = Σ_s exp(la_end - la_s) u_s ⊗ B_s
+    dend = jnp.exp(la[:, :, -1:, :] - la)                          # [B,NC,c,H]
+    U = jnp.einsum("bnsh,bnshp,bnsx->bnhpx", dend, uc, Bc)
+    a_chunk = jnp.exp(la[:, :, -1, :])                             # [B,NC,H]
+
+    def inter(s0, inputs):
+        a_c, u_c = inputs
+        s1 = a_c[:, :, None, None] * s0 + u_c
+        return s1, s0
+
+    s_init = jnp.zeros((Bb, H, P, N), f32)
+    s_final, s_starts = lax.scan(inter, s_init,
+                                 (a_chunk.transpose(1, 0, 2), U.transpose(1, 0, 2, 3, 4)))
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)                   # [B,NC,H,P,N]
+
+    y_cross = jnp.einsum("bnth,bntx,bnhpx->bnthp", jnp.exp(la), Cc, s_starts)
+    y = (y_intra + y_cross).reshape(Bb, S, H, P)
+    return y.astype(xh.dtype), s_final
+
+
+def mamba_block(x, p, cfg: ModelConfig, ctx: ShardCtx, *,
+                state: Dict = None):
+    """Full mamba mixer.  ``state=None`` → parallel (train/prefill) mode,
+    returns (y, new_state); state dict has 'conv' [B,K-1,d_in], 'ssm'
+    [B,H,P,N] for single-token decode."""
+    s = cfg.ssm
+    d_in, H, P = mamba_dims(cfg)
+    N = s.state_dim
+    B, S, _ = x.shape
+
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        conv_tail = None
+        xi_conv = _causal_conv(xi, p["conv_w"], p["conv_bias"])
+        conv_tail = xi[:, -(s.conv_dim - 1):, :] if S >= s.conv_dim - 1 else \
+            jnp.pad(xi, ((0, 0), (s.conv_dim - 1 - S, 0), (0, 0)))
+    else:
+        window = jnp.concatenate([state["conv"], xi], axis=1)      # [B,K,d_in]
+        xi_conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])[:, None, :] \
+            + p["conv_bias"]
+        conv_tail = window[:, 1:, :]
+    xi_conv = jax.nn.silu(xi_conv)
+
+    dt = jax.nn.softplus(jnp.einsum("bse,eh->bsh", xi_conv, p["w_dt"])
+                         .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    bc = jnp.einsum("bse,en->bsn", xi_conv, p["w_bc"])
+    B_t, C_t = jnp.split(bc, 2, axis=-1)
+    xh = xi_conv.reshape(B, S, H, P)
+
+    if state is None:
+        y, s_final = _ssd_chunked(xh, dt, p["a_log"], B_t, C_t, s.chunk)
+    else:
+        f32 = jnp.float32
+        a = jnp.exp(-jnp.exp(p["a_log"].astype(f32)) * dt[:, 0, :])    # [B,H]
+        u = dt[:, 0, :, None] * xh[:, 0].astype(f32)                   # [B,H,P]
+        s_new = a[:, :, None, None] * state["ssm"] \
+            + jnp.einsum("bhp,bn->bhpn", u, B_t[:, 0].astype(f32))
+        y = jnp.einsum("bn,bhpn->bhp", C_t[:, 0].astype(f32), s_new)
+        y = y[:, None].reshape(B, 1, H, P).astype(x.dtype)
+        s_final = s_new
+
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = {"conv": conv_tail, "ssm": s_final}
+    return out, new_state
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in, H, P = mamba_dims(cfg)
+    return {"conv": (batch, s.conv_dim - 1, d_in),
+            "ssm": (batch, H, P, s.state_dim)}
+
+
+# ==========================================================================
+# RWKV6 (Finch)
+# ==========================================================================
+def rwkv_param_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.d_model // cfg.ssm.head_dim
+    K = cfg.ssm.head_dim
+    lora = 64
+    return {
+        # time-mix
+        "mu_r": ((d,), (None,)), "mu_k": ((d,), (None,)),
+        "mu_v": ((d,), (None,)), "mu_g": ((d,), (None,)),
+        "mu_w": ((d,), (None,)),
+        "w_r": ((d, d), ("d_model", "heads")),
+        "w_k": ((d, d), ("d_model", "heads")),
+        "w_v": ((d, d), ("d_model", "heads")),
+        "w_g": ((d, d), ("d_model", "heads")),
+        "w_o": ((d, d), ("heads", "d_model")),
+        "decay_base": ((H, K), ("heads", None)),
+        "decay_lora_a": ((d, lora), ("d_model", None)),
+        "decay_lora_b": ((lora, d), (None, "heads")),
+        "bonus_u": ((H, K), ("heads", None)),
+        "ln_x_scale": ((d,), (None,)), "ln_x_bias": ((d,), (None,)),
+        # channel-mix
+        "mu_ck": ((d,), (None,)), "mu_cr": ((d,), (None,)),
+        "cm_k": ((d, cfg.d_ff), ("d_model", "ffn")),
+        "cm_v": ((cfg.d_ff, d), ("ffn", "d_model")),
+        "cm_r": ((d, d), ("d_model", "heads")),
+    }
+
+
+def _wkv_chunked(r, k, v, lw, u, chunk: int, use_impl: bool = True):
+    """Exact chunked WKV6.  r/k/v/lw: [B,S,H,K] (lw = log decay ≤ 0), u [H,K].
+    Returns o [B,S,H,V] and final state [B,H,K,V].
+
+    o_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    """
+    if use_impl:
+        from repro.kernels import ops
+        impl = ops.get_impl("rwkv_wkv")
+        if impl is not None:
+            out = impl(r, k, v, lw, u, chunk=chunk)
+            if isinstance(out, tuple):
+                return out
+            Bb, _, H, K = r.shape
+            return out, jnp.zeros((Bb, H, K, v.shape[-1]), jnp.float32)
+
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    NC = S // c
+    f32 = jnp.float32
+    rs = lambda t: t.astype(f32).reshape(B, NC, c, H, -1)
+    rc, kc, vc, lwc = rs(r), rs(k), rs(v), rs(lw)
+
+    # ---- intra-chunk: sequential over c, vectorized over (B, NC, H) ------
+    def intra_step(S_i, inputs):
+        r_t, k_t, v_t, w_t = inputs                         # [B,NC,H,K/V]
+        o_t = jnp.einsum("bnhk,bnhkv->bnhv", r_t, S_i) \
+            + jnp.einsum("bnhk,bnhk,bnhv->bnhv", r_t, u.astype(f32) * k_t, v_t)
+        S_i = jnp.exp(w_t)[..., None] * S_i + k_t[..., None] * v_t[..., None, :]
+        return S_i, o_t
+
+    xs = tuple(t.transpose(2, 0, 1, 3, 4) for t in (rc, kc, vc, lwc))
+    S0 = jnp.zeros((B, NC, H, K, V), f32)
+    U, o_intra = lax.scan(intra_step, S0, xs)               # U: per-chunk ΔS
+    o_intra = o_intra.transpose(1, 2, 0, 3, 4)              # [B,NC,c,H,V]
+
+    # ---- inter-chunk state scan -----------------------------------------
+    w_chunk = jnp.exp(jnp.sum(lwc, axis=2))                 # [B,NC,H,K]
+
+    def inter(s0, inputs):
+        w_c, u_c = inputs
+        return w_c[..., None] * s0 + u_c, s0
+
+    s_init = jnp.zeros((B, H, K, V), f32)
+    s_final, s_starts = lax.scan(
+        inter, s_init, (w_chunk.transpose(1, 0, 2, 3), U.transpose(1, 0, 2, 3, 4)))
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)            # [B,NC,H,K,V]
+
+    # ---- cross term: r_t ⊙ exp(exclusive cumsum lw) · S_start ------------
+    lwx = jnp.cumsum(lwc, axis=2) - lwc                     # exclusive, ≤ 0
+    o_cross = jnp.einsum("bnchk,bnhkv->bnchv", rc * jnp.exp(lwx), s_starts)
+    o = (o_intra + o_cross).reshape(B, S, H, V)
+    return o, s_final
+
+
+def _wkv_decode(r, k, v, lw, u, state):
+    """Single token: r/k/v/lw [B,H,K]; state [B,H,K,V]."""
+    f32 = jnp.float32
+    r, k, v, lw = (t.astype(f32) for t in (r, k, v, lw))
+    o = jnp.einsum("bhk,bhkv->bhv", r, state) \
+        + jnp.einsum("bhk,bhk,bhv->bhv", r, u.astype(f32) * k, v)
+    state = jnp.exp(lw)[..., None] * state + k[..., None] * v[..., None, :]
+    return o, state
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _token_shift(x, last):
+    """x [B,S,d]; last [B,d] = final token of the previous segment."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def rwkv_time_mix(x, p, cfg: ModelConfig, ctx: ShardCtx, *,
+                  shift_state, wkv_state):
+    """RWKV6 attention replacement.  Returns (out, (shift', wkv'))."""
+    B, S, d = x.shape
+    H = d // cfg.ssm.head_dim
+    K = cfg.ssm.head_dim
+    prev, shift_new = _token_shift(x, shift_state)
+
+    xr = _lerp(x, prev, p["mu_r"])
+    xk = _lerp(x, prev, p["mu_k"])
+    xv = _lerp(x, prev, p["mu_v"])
+    xg = _lerp(x, prev, p["mu_g"])
+    xw = _lerp(x, prev, p["mu_w"])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, S, H, K)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, S, H, K)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, S, H, K)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    dlora = jnp.einsum("bsd,dl->bsl", jnp.tanh(
+        jnp.einsum("bsd,dl->bsl", xw, p["decay_lora_a"])), p["decay_lora_b"])
+    lw = -jnp.exp(p["decay_base"].astype(jnp.float32)[None, None]
+                  + dlora.reshape(B, S, H, K).astype(jnp.float32))  # ≤ 0
+
+    if S == 1 and wkv_state is not None and wkv_state.ndim == 4:
+        o, wkv_new = _wkv_decode(r[:, 0], k[:, 0], v[:, 0], lw[:, 0],
+                                 p["bonus_u"], wkv_state)
+        o = o[:, None]
+    else:
+        o, wkv_new = _wkv_chunked(r, k, v, lw, p["bonus_u"], cfg.ssm.chunk)
+        if wkv_state is not None:
+            # continuing from a previous segment: fold carried state in via
+            # the same cross-term identity (decode path handles step-wise).
+            lw_full = jnp.cumsum(lw, axis=1) - lw
+            o = o + jnp.einsum("bshk,bhkv->bshv",
+                               r.astype(jnp.float32) * jnp.exp(lw_full),
+                               wkv_state)
+            wkv_new = jnp.exp(jnp.sum(lw, axis=1))[..., None] * wkv_state + wkv_new
+
+    o = o.reshape(B, S, d).astype(x.dtype)
+    o = layer_scaled_groupnorm(o, p["ln_x_scale"], p["ln_x_bias"], H, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", o * g, p["w_o"])
+    return ctx.constrain(out, "batch", "seq", None), (shift_new, wkv_new)
+
+
+def layer_scaled_groupnorm(x, scale, bias, groups: int, eps: float):
+    B, S, d = x.shape
+    xg = x.reshape(B, S, groups, d // groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, S, d) * scale + bias).astype(x.dtype)
+
+
+def rwkv_channel_mix(x, p, cfg: ModelConfig, ctx: ShardCtx, *, shift_state):
+    prev, shift_new = _token_shift(x, shift_state)
+    xk = _lerp(x, prev, p["mu_ck"])
+    xr = _lerp(x, prev, p["mu_cr"])
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_k"])))
+    if ctx.attn_impl == "cp":
+        h = ctx.constrain(h, "batch", "seq", None)
+    else:
+        h = ctx.constrain(h, "batch", None, "ffn")
+    out = jnp.einsum("bsf,fd->bsd", h, p["cm_v"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"]))
+    return out * rgate, shift_new
+
+
+def rwkv_state_shape(cfg: ModelConfig, batch: int):
+    H = cfg.d_model // cfg.ssm.head_dim
+    K = cfg.ssm.head_dim
+    return {"wkv": (batch, H, K, K),
+            "shift_tm": (batch, cfg.d_model),
+            "shift_cm": (batch, cfg.d_model)}

@@ -1,0 +1,291 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, n_frames, d_model].  Encoder is
+bidirectional with learned positions; decoder is causal with cross-attention
+to the encoder output.  Decode shapes exercise the decoder only (the encoder
+has no decode step); the cross K/V are precomputed into the cache at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import ShardCtx
+from repro.models import layers as L
+
+MAX_DECODER_POS = 32768  # learned positions table bound (largest assigned shape)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ShardCtx] = None, *,
+                 q_chunk: int = 256, loss_chunk: int = 1024, remat: bool = True):
+        assert cfg.family == "encdec" and cfg.encoder is not None
+        self.cfg = cfg
+        self.ctx = ctx or ShardCtx.null()
+        self.q_chunk = q_chunk
+        self.loss_chunk = loss_chunk
+        self.remat = remat
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self._enc_axes = L.axes_from_spec(self.enc_layer_spec())
+        self._dec_axes = L.axes_from_spec(self.dec_layer_spec())
+
+    # ------------------------------------------------------------------
+    def enc_layer_spec(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        spec = {"ln1": ((d,), (None,)), "ln1_b": ((d,), (None,)),
+                "ln2": ((d,), (None,)), "ln2_b": ((d,), (None,))}
+        spec.update(L.attn_param_spec(cfg))
+        spec.update(L.mlp_param_spec(cfg))
+        return spec
+
+    def dec_layer_spec(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        spec = {"ln1": ((d,), (None,)), "ln1_b": ((d,), (None,)),
+                "ln2": ((d,), (None,)), "ln2_b": ((d,), (None,)),
+                "ln3": ((d,), (None,)), "ln3_b": ((d,), (None,))}
+        spec.update(L.attn_param_spec(cfg))
+        spec.update({f"x_{k}": v for k, v in L.attn_param_spec(cfg).items()})
+        spec.update(L.mlp_param_spec(cfg))
+        return spec
+
+    def top_spec(self):
+        cfg = self.cfg
+        vp, d = cfg.padded_vocab(), cfg.d_model
+        return {
+            "embed": ((vp, d), ("vocab", "d_model")),
+            "dec_pos": ((MAX_DECODER_POS, d), (None, "d_model")),
+            "enc_pos": ((cfg.encoder.n_frames, d), ("frames", "d_model")),
+            "enc_final_ln": ((d,), (None,)), "enc_final_ln_b": ((d,), (None,)),
+            "final_ln": ((d,), (None,)), "final_ln_b": ((d,), (None,)),
+        }
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ek = jax.random.split(jax.random.fold_in(key, 1), cfg.encoder.n_layers)
+        dk = jax.random.split(jax.random.fold_in(key, 2), cfg.n_layers)
+        enc = jax.vmap(lambda k: L.init_from_spec(k, self.enc_layer_spec(),
+                                                  self.dtype))(ek)
+        dec = jax.vmap(lambda k: L.init_from_spec(k, self.dec_layer_spec(),
+                                                  self.dtype))(dk)
+        top = L.init_from_spec(jax.random.fold_in(key, 0), self.top_spec(),
+                               self.dtype)
+        return {"enc_layers": enc, "dec_layers": dec, **top}
+
+    def param_axes(self):
+        return {
+            "enc_layers": {k: ("layer",) + v for k, v in
+                           L.axes_from_spec(self.enc_layer_spec()).items()},
+            "dec_layers": {k: ("layer",) + v for k, v in
+                           L.axes_from_spec(self.dec_layer_spec()).items()},
+            **L.axes_from_spec(self.top_spec()),
+        }
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    def _ln(self, x, p, name):
+        return L.layer_norm(x, p[name], p[name + "_b"], self.cfg.norm_eps)
+
+    def _self_attn(self, x, p, mode, cache=None, pos=None, causal=True,
+                   prefix=""):
+        cfg, ctx = self.cfg, self.ctx
+        pp = {k[len(prefix):]: v for k, v in p.items()
+              if k.startswith(prefix)} if prefix else p
+        q, k, v = L._project_qkv(x, pp, cfg, ctx, positions=None)
+        if mode == "par":
+            out = L.attention_chunked(q, k, v, causal=causal, ctx=ctx,
+                                      q_chunk=self.q_chunk)
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache = cache
+            k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                               (0, pos, 0, 0))
+            v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                               (0, pos, 0, 0))
+            length = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+            out = L.attention_decode(q, k_cache, v_cache, length)
+            new_kv = (k_cache, v_cache)
+        B, Sq = x.shape[:2]
+        return jnp.einsum("bsq,qd->bsd", out.reshape(B, Sq, -1), pp["wo"]), new_kv
+
+    def _cross_attn(self, x, p, enc_kv):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        B, Sq, _ = x.shape
+        q = jnp.einsum("bsd,dq->bsq", x, p["x_wq"])
+        if cfg.qkv_bias:
+            q = q + p["x_bq"]
+        q = q.reshape(B, Sq, cfg.n_heads, hd)
+        k, v = enc_kv
+        out = L.attention_chunked(q, k, v, causal=False, ctx=self.ctx,
+                                  q_chunk=min(self.q_chunk, Sq))
+        return jnp.einsum("bsq,qd->bsd", out.reshape(B, Sq, -1), p["x_wo"])
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: [B, n_frames, d_model] (stub frontend output)."""
+        x = frames.astype(self.dtype) + params["enc_pos"].astype(self.dtype)
+        x = self.ctx.constrain(x, "batch", None, None)
+
+        def body(x, lp):
+            lp = self.ctx.gather_params(lp, self._enc_axes)
+            h = self._ln(x, lp, "ln1")
+            a, _ = self._self_attn(h, lp, "par", causal=False)
+            x = x + a
+            h = self._ln(x, lp, "ln2")
+            x = x + L.mlp(h, lp, self.cfg, self.ctx)
+            return x, None
+
+        if self.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return self._ln(x, {"f": params["enc_final_ln"],
+                            "f_b": params["enc_final_ln_b"]}, "f")
+
+    def _dec_embed(self, params, tokens, pos0):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        positions = pos0 + jnp.arange(tokens.shape[1])
+        x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(self.dtype)
+        return self.ctx.constrain(x, "batch", None, None)
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-layer cross K/V: [L, B, F, KV, hd]."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def one(lp):
+            k = jnp.einsum("bfd,dq->bfq", enc_out, lp["x_wk"])
+            v = jnp.einsum("bfd,dq->bfq", enc_out, lp["x_wv"])
+            if cfg.qkv_bias:
+                k, v = k + lp["x_bk"], v + lp["x_bv"]
+            B, F = enc_out.shape[:2]
+            return (k.reshape(B, F, cfg.n_kv_heads, hd),
+                    v.reshape(B, F, cfg.n_kv_heads, hd))
+
+        return jax.vmap(one)(params["dec_layers"])
+
+    def decode_parallel(self, params, tokens, enc_out, *, collect_cache=False):
+        x = self._dec_embed(params, tokens, 0)
+        xk, xv = self._cross_kv(params, enc_out)
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            lp = self.ctx.gather_params(lp, self._dec_axes)
+            h = self._ln(x, lp, "ln1")
+            a, kv = self._self_attn(h, lp, "par", causal=True)
+            x = x + a
+            h = self._ln(x, lp, "ln2")
+            x = x + self._cross_attn(h, lp, (ck, cv))
+            h = self._ln(x, lp, "ln3")
+            x = x + L.mlp(h, lp, self.cfg, self.ctx)
+            return x, kv if collect_cache else ()
+
+        if self.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, kv = lax.scan(body, x, (params["dec_layers"], xk, xv))
+        x = self._ln(x, {"f": params["final_ln"], "f_b": params["final_ln_b"]},
+                     "f")
+        return x, (kv, (xk, xv))
+
+    def logits_fn(self, params, hidden, *, gather: bool = False):
+        cfg = self.cfg
+        embed = params["embed"]
+        if gather:
+            embed = self.ctx.gather_fsdp(embed, ("vocab", "d_model"))
+        logits = jnp.einsum("bsd,vd->bsv", hidden, embed).astype(jnp.float32)
+        vp = cfg.padded_vocab()
+        if vp != cfg.vocab_size:
+            logits = jnp.where((jnp.arange(vp) < cfg.vocab_size)[None, None],
+                               logits, L.NEG_INF)
+        return self.ctx.constrain(logits, "batch", None, "vocab")
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: {'frames': [B,F,d], 'tokens': [B,S], 'targets': [B,S]}"""
+        enc_out = self.encode(params, batch["frames"])
+        hidden, _ = self.decode_parallel(params, batch["tokens"], enc_out)
+        B, Sq, _ = hidden.shape
+        c = min(self.loss_chunk, Sq)
+        hc = hidden.reshape(B, Sq // c, c, -1).transpose(1, 0, 2, 3)
+        tc = batch["targets"].reshape(B, Sq // c, c).transpose(1, 0, 2)
+
+        def chunk(carry, xs):
+            h, t = xs
+            logp = jax.nn.log_softmax(self.logits_fn(params, h, gather=True),
+                                      axis=-1)
+            valid = t >= 0
+            nll = -jnp.take_along_axis(logp, jnp.where(valid, t, 0)[..., None],
+                                       axis=-1)[..., 0]
+            tot, cnt = carry
+            return (tot + jnp.sum(nll * valid), cnt + jnp.sum(valid)), None
+
+        (tot, cnt), _ = lax.scan(chunk, (jnp.zeros((), jnp.float32),) * 2,
+                                 (hc, tc))
+        loss = tot / jnp.maximum(cnt, 1.0)
+        return loss, {"nll": loss}
+
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int):
+        cfg = self.cfg
+        Lc, hd, F = cfg.n_layers, cfg.resolved_head_dim, cfg.encoder.n_frames
+        kv = (Lc, batch, max_len, cfg.n_kv_heads, hd)
+        xkv = (Lc, batch, F, cfg.n_kv_heads, hd)
+        return {"k": jax.ShapeDtypeStruct(kv, self.dtype),
+                "v": jax.ShapeDtypeStruct(kv, self.dtype),
+                "xk": jax.ShapeDtypeStruct(xkv, self.dtype),
+                "xv": jax.ShapeDtypeStruct(xkv, self.dtype)}
+
+    def cache_axes(self):
+        return {"k": ("layer", "batch", None, "kv_heads", None),
+                "v": ("layer", "batch", None, "kv_heads", None),
+                "xk": ("layer", "batch", "frames", "kv_heads", None),
+                "xv": ("layer", "batch", "frames", "kv_heads", None)}
+
+    def init_cache(self, batch, max_len):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_len))
+
+    def prefill(self, params, tokens, frames, max_len: Optional[int] = None):
+        max_len = max_len or tokens.shape[1]
+        enc_out = self.encode(params, frames)
+        hidden, (kv, (xk, xv)) = self.decode_parallel(params, tokens, enc_out,
+                                                      collect_cache=True)
+        logits = self.logits_fn(params, hidden[:, -1:, :], gather=True)
+        cache = self.init_cache(tokens.shape[0], max_len)
+        cache["k"] = lax.dynamic_update_slice(cache["k"],
+                                              kv[0].astype(self.dtype),
+                                              (0, 0, 0, 0, 0))
+        cache["v"] = lax.dynamic_update_slice(cache["v"],
+                                              kv[1].astype(self.dtype),
+                                              (0, 0, 0, 0, 0))
+        cache["xk"], cache["xv"] = xk.astype(self.dtype), xv.astype(self.dtype)
+        return logits, cache
+
+    def decode_step(self, params, cache, token, pos):
+        x = self._dec_embed(params, token, pos)
+
+        def body(x, xs):
+            lp, ck, cv, xck, xcv = xs
+            h = self._ln(x, lp, "ln1")
+            a, (nk, nv) = self._self_attn(h, lp, "dec", cache=(ck, cv), pos=pos)
+            x = x + a
+            h = self._ln(x, lp, "ln2")
+            x = x + self._cross_attn(h, lp, (xck, xcv))
+            h = self._ln(x, lp, "ln3")
+            x = x + L.mlp(h, lp, self.cfg, self.ctx)
+            return x, (nk, nv)
+
+        x, (nk, nv) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"], cache["xk"], cache["xv"]))
+        x = self._ln(x, {"f": params["final_ln"], "f_b": params["final_ln_b"]},
+                     "f")
+        new_cache = dict(cache, k=nk, v=nv)
+        return self.logits_fn(params, x), new_cache

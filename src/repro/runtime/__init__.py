@@ -1,0 +1,3 @@
+from repro.runtime.ft import FaultTolerantLoop, StragglerWatchdog, FailureInjector
+from repro.runtime.compress import (compress_ef_int8, decompress_int8,
+                                    make_compression_hook, compressed_psum)

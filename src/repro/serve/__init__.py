@@ -1,0 +1,1 @@
+from repro.serve.decode import BatchedServer, generate

@@ -1,0 +1,118 @@
+"""Batched serving: prefill + greedy decode with continuous batching lite.
+
+``BatchedServer`` keeps a fixed-size decode batch; finished sequences are
+replaced from the pending queue by re-prefilling into their cache rows
+(slot recycling).  This is the serving loop the decode_* dry-run cells
+lower one step of.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(model, params, prompts: jnp.ndarray, *, max_new: int = 16,
+             frames: Optional[jnp.ndarray] = None,
+             eos_id: Optional[int] = None) -> np.ndarray:
+    """Greedy generation for a fixed batch.  prompts: [B, S] int32."""
+    B, S = prompts.shape
+    max_len = S + max_new
+    if model.cfg.family == "encdec":
+        logits, cache = model.prefill(params, prompts, frames,
+                                      max_len=max_len)
+    else:
+        logits, cache = model.prefill(params, prompts, max_len=max_len)
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1, :model.cfg.vocab_size],
+                     axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[:, -1, :model.cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Continuous-batching-lite greedy server over a fixed slot count."""
+
+    def __init__(self, model, params, *, slots: int = 4, prompt_len: int = 32,
+                 max_len: int = 128):
+        assert model.cfg.family != "encdec", "use generate() for enc-dec"
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)
+        self.cache = model.init_cache(slots, max_len)
+        self._step = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(
+            lambda p, t: model.prefill(p, t, max_len=max_len))
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        req = Request(rid=len(self.queue), prompt=prompt, max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, cache1 = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt[None, :]))
+                # splice the single-sequence cache into slot s
+                def put(big, one):
+                    return big.at[:, s:s + 1].set(one.astype(big.dtype))
+                self.cache = jax.tree.map(put, self.cache, cache1)
+                tok = int(jnp.argmax(
+                    logits[0, -1, :self.model.cfg.vocab_size]))
+                req.tokens.append(tok)
+                self.active[s] = req
+                self.pos[s] = len(req.prompt)
+
+    def step(self):
+        """One decode step for all occupied slots (single pos: the server
+        keeps slots aligned by padding prompts to prompt_len)."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.active[s].tokens[-1]
+        pos = int(self.pos[live[0]] + len(self.active[live[0]].tokens) - 1)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(toks), jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(
+            logits[:, -1, :self.model.cfg.vocab_size], axis=-1))
+        for s in live:
+            req = self.active[s]
+            req.tokens.append(int(nxt[s]))
+            if len(req.tokens) >= req.max_new:
+                req.done = True
+                self.active[s] = None
+        return True
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return finished

@@ -1,0 +1,2 @@
+from repro.sharding.ctx import (ShardCtx, RuleSet, DEFAULT_RULES, EP_RULES,
+                                map_axes, is_axes_leaf)

@@ -1,0 +1,231 @@
+"""Sharding context: logical-axis → mesh-axis rules with divisibility fallback.
+
+Models annotate every parameter with *logical* axes (``('d_model', 'heads')``
+for ``wq`` etc.) and call ``ctx.constrain`` on activations.  A ``RuleSet``
+maps logical axes to mesh axes (2D FSDP×TP by default); any dimension that is
+not divisible by its mesh-axis extent silently falls back to replication so
+that odd head counts (hymba's 25) or expert counts (qwen2's 60) never break
+compilation — the dry-run log records the fallbacks.
+
+On a single real device (smoke tests) ``ShardCtx.null()`` turns every
+constraint into a no-op, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Logical axis vocabulary used by the models.
+#   batch / seq         activations
+#   d_model             residual width (FSDP axis for weights)
+#   heads / kv_heads    attention heads
+#   ffn / expert_ffn    MLP hidden
+#   vocab               embedding rows / logit cols
+#   experts             MoE expert dim
+#   layer               stacked scan dim (never sharded)
+#   state / conv / misc never sharded
+
+RuleSet = Dict[str, Axis]
+
+DEFAULT_RULES: RuleSet = {
+    "batch": "__dp__",        # resolved to the ctx's data axes (incl. 'pod')
+    "seq": "__tp__",          # sequence parallelism on the model axis
+    "kv_seq": None,           # decode KV-cache seq dim; long_500k maps it to dp
+    "d_model": "data",        # FSDP
+    "heads": "model",         # TP
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert_ffn": "model",
+    "vocab": "model",
+    "experts": None,
+    "layer": None,
+    "state": None,
+    "conv": None,
+    "head_dim": None,
+    "frames": None,
+    "misc": None,
+}
+
+# Expert-parallel variant (perf-pass candidate for dbrx: 16 experts == tp 16).
+EP_RULES: RuleSet = dict(DEFAULT_RULES, experts="model", expert_ffn=None)
+
+# Pure FSDP: both mesh axes act as data axes; weights shard over the
+# flattened device set and are gathered per layer (MaxText-style default for
+# dense models — no TP activation collectives at all).  The ShardCtx using
+# this preset must set dp to all mesh axes.
+FSDP_RULES: RuleSet = dict(
+    DEFAULT_RULES,
+    batch="__dp__", seq=None, d_model="__dp__",
+    heads=None, kv_heads=None, ffn=None, expert_ffn=None, vocab=None,
+)
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)   # data axes, outermost first (('pod','data') multi-pod)
+    tp: str = "model"
+    rules: RuleSet = field(default_factory=lambda: dict(DEFAULT_RULES))
+    # knobs the perf pass flips
+    seq_shard: bool = True            # activation sequence parallelism
+    # KV-cache layout at decode: 'local' (seq replicated), 'tp_seq' (seq
+    # over the model axis — decode_32k default so big caches fit HBM),
+    # 'dp_seq' (seq over the data axes — long_500k)
+    decode_kv: str = "local"
+    # parallel attention strategy: 'tp' (heads on model axis, Megatron-SP)
+    # or 'cp' (context parallel: q seq-sharded on model, K/V all-gathered —
+    # §Perf winner for GQA prefill)
+    attn_impl: str = "tp"
+    # MoE expert compute: 'einsum' (XLA decides the reduction point) or
+    # 'shard_map' (combine-before-reduce: psum [B,S,d] instead of the 5×
+    # bigger [B,E,C,d] — §Perf winner for MoE train)
+    moe_impl: str = "einsum"
+    # axes gather_fsdp strips from weights at compute time; None → dp ∪
+    # {'data'}.  The cp preset rests weights/optimizer over ALL axes
+    # (ZeRO over 256/512) while activations use model for sequence.
+    fsdp_axes: Optional[Tuple[str, ...]] = None
+    log_fallbacks: bool = False
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def null() -> "ShardCtx":
+        return ShardCtx(mesh=None)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def replace(self, **kw) -> "ShardCtx":
+        return dataclasses.replace(self, **kw)
+
+    def axis_size(self, axis: Axis) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        names = (axis,) if isinstance(axis, str) else axis
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+    # ------------------------------------------------------------------
+    def _resolve(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        axis = self.rules.get(logical, None)
+        if axis == "__dp__":
+            return self.dp
+        if axis == "__tp__":
+            return self.tp if self.seq_shard else None
+        return axis
+
+    def _fit_axis(self, axis: Axis, dim: int) -> Axis:
+        """Divisibility fallback chain: full tuple → prefixes → each single
+        axis → replicated.  (e.g. d_model=2560 on a 512-way flat FSDP axis
+        falls back to the 32-way ('pod','data') prefix.)"""
+        if axis is None:
+            return None
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        candidates = [names[:k] for k in range(len(names), 0, -1)]
+        candidates += [(n,) for n in names[1:]]
+        for cand in candidates:
+            if dim % self.axis_size(cand) == 0:
+                return cand[0] if len(cand) == 1 else cand
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for the given logical axes; enforces divisibility
+        when ``shape`` is known (falling back per-dim along the chain) and
+        drops duplicate mesh axes first-come-first-served."""
+        entries = []
+        used = set()
+        for i, name in enumerate(logical_axes):
+            axis = self._resolve(name)
+            if axis is not None and shape is not None:
+                axis = self._fit_axis(axis, shape[i])
+            if axis is not None:
+                names = (axis,) if isinstance(axis, str) else tuple(axis)
+                if any(n in used for n in names):
+                    axis = None
+                else:
+                    used.update(names)
+            entries.append(axis)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x, *logical_axes: Optional[str]):
+        """with_sharding_constraint on an activation; no-op when disabled."""
+        if self.mesh is None:
+            return x
+        s = self.sharding(logical_axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, s)
+
+    # ------------------------------------------------------------------
+    def _drop_fsdp(self, axis: Axis) -> Axis:
+        """Remove FSDP (rest-sharding) axes from a resolved mesh axis."""
+        if axis is None:
+            return None
+        drop = (set(self.fsdp_axes) if self.fsdp_axes is not None
+                else set(self.dp) | {"data"})
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        kept = tuple(n for n in names if n not in drop)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+
+    def gather_fsdp(self, w, logical_axes: Sequence[Optional[str]]):
+        """Explicit FSDP weight gather (MaxText pattern): constrain a weight
+        to its spec with the data axes dropped, so XLA all-gathers the small
+        weight instead of all-reducing big activations; the reverse-mode
+        transpose is exactly the FSDP gradient reduce-scatter.  Used in
+        train/prefill; decode keeps weights fully sharded (activations are
+        tiny there, partial-sum + all-reduce is optimal)."""
+        if self.mesh is None:
+            return w
+        entries = []
+        for i, name in enumerate(logical_axes):
+            axis = self._drop_fsdp(self._resolve(name))
+            axis = self._fit_axis(axis, w.shape[i])
+            entries.append(axis)
+        while entries and entries[-1] is None:
+            entries.pop()
+        s = NamedSharding(self.mesh, P(*entries))
+        return jax.lax.with_sharding_constraint(w, s)
+
+    def gather_params(self, params, axes_tree):
+        """gather_fsdp over a whole (sub)tree of weights."""
+        if self.mesh is None:
+            return params
+        return map_axes(lambda ax, w: self.gather_fsdp(w, ax),
+                        axes_tree, params)
+
+    # ------------------------------------------------------------------
+    def tree_shardings(self, axes_tree, shape_tree):
+        """NamedShardings for a whole pytree: ``axes_tree`` mirrors
+        ``shape_tree`` with tuples of logical axis names as leaves."""
+        return map_axes(lambda ax, leaf: self.sharding(ax, leaf.shape),
+                        axes_tree, shape_tree)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def map_axes(fn, axes_tree, *trees):
+    """tree.map where leaves of the first tree are logical-axes tuples
+    (including the empty tuple for scalars)."""
+    return jax.tree.map(fn, axes_tree, *trees, is_leaf=is_axes_leaf)

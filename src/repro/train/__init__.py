@@ -1,0 +1,2 @@
+from repro.train.optim import AdamWConfig, init_state, apply_update
+from repro.train.steps import make_train_step, make_prefill_step, make_serve_step

@@ -1,0 +1,102 @@
+"""Step functions: train (grad-accum, clip, AdamW), prefill, serve/decode.
+
+These are the functions the launcher jits with explicit in/out shardings and
+the dry-run lowers for every (arch × shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.train import optim
+from repro.train.optim import AdamWConfig
+
+
+def make_loss_fn(model):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, accum: int = 1,
+                    grad_hook: Optional[Callable] = None,
+                    grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``accum`` > 1 splits the batch on the leading axis into
+    microbatches accumulated in fp32.  ``grad_hook`` (e.g. pod-axis gradient
+    compression) is applied to the final gradient tree.  ``grad_shardings``
+    (the param shardings) pins gradients to the parameter layout so XLA
+    reduce-scatters per layer instead of all-reducing full-size gradients
+    (≈2× less FSDP gradient traffic — EXPERIMENTS.md §Perf A9)."""
+    loss_fn = make_loss_fn(model)
+    vgrad = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s)
+            if s is not None else g, grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = vgrad(params, batch)
+            grads = constrain_grads(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = vgrad(params, mb)
+                g = constrain_grads(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                            mbatch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {}
+        if grad_hook is not None:
+            grads = grad_hook(grads)
+        params, opt_state, opt_metrics = optim.apply_update(
+            opt_cfg, params, grads, opt_state)
+        out_metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    """prefill_step(params, tokens [, frames]) -> (last logits, cache)."""
+    if model.cfg.family == "encdec":
+        def prefill_step(params, tokens, frames):
+            return model.prefill(params, tokens, frames)
+    else:
+        def prefill_step(params, tokens):
+            return model.prefill(params, tokens)
+    return prefill_step
+
+
+def make_serve_step(model, *, greedy: bool = True):
+    """serve_step(params, cache, token [B,1], pos ()) -> (next_token, cache).
+
+    One new token against a KV cache / recurrent state of length seq_len —
+    this is what decode_32k / long_500k lower."""
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return serve_step

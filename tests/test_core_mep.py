@@ -1,0 +1,276 @@
+"""MEP framework behaviour: eq. 1–5 semantics, AER, PPI, integration, and
+hypothesis property tests on the invariants."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AER, CPUPlatform, DirectProposer, HeuristicProposer,
+                        MEPConstraints, OptConfig, PatternStore,
+                        TPUModelPlatform, build_mep, cases, emit_script,
+                        fe_check, get_case, optimize, trimmed_mean)
+from repro.core.datagen import DataBudget, generate
+from repro.core.kernelcase import ArraySpec
+from repro.core import integrate
+from repro.kernels import ops
+
+FAST = MEPConstraints(t_max_s=2.0, r=5, k=1)
+FAST_CFG = OptConfig(d_rounds=2, n_candidates=2, r=5, k=1)
+
+
+# -------------------------------------------------------- eq.3 trimmed ----
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                          allow_nan=False), min_size=7, max_size=50),
+       st.integers(min_value=0, max_value=3))
+@settings(max_examples=100, deadline=None)
+def test_trimmed_mean_properties(times, k):
+    if len(times) <= 2 * k:
+        with pytest.raises(ValueError):
+            trimmed_mean(times, k)
+        return
+    tm = trimmed_mean(times, k)
+    s = sorted(times)
+    # bounded by the kept extremes
+    assert s[k] - 1e-9 <= tm <= s[len(s) - k - 1] + 1e-9
+    # permutation invariant
+    assert math.isclose(tm, trimmed_mean(list(reversed(times)), k),
+                        rel_tol=1e-9)
+    # outlier robustness: inflating the max by 1000× can't change k>0 trim
+    if k > 0:
+        inflated = s[:-1] + [s[-1] * 1000]
+        assert math.isclose(tm, trimmed_mean(inflated, k), rel_tol=1e-9)
+
+
+# ------------------------------------------------------ datagen / eq.2 ----
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=64),
+       st.sampled_from(["normal", "uniform", "positive", "sorted",
+                        "symmetric", "spd"]))
+@settings(max_examples=50, deadline=None)
+def test_datagen_properties(n, m, kind):
+    spec = ArraySpec((n, m) if kind not in ("symmetric", "spd") else (n, n),
+                     "float32", kind)
+    a, = generate([spec], seed=7)
+    b, = generate([spec], seed=7)
+    np.testing.assert_array_equal(a, b)          # deterministic
+    assert a.nbytes == spec.nbytes
+    if kind == "sorted":
+        assert np.all(np.diff(a, axis=-1) >= 0)
+    if kind == "symmetric":
+        np.testing.assert_allclose(a, a.T, rtol=1e-6)
+    if kind == "spd":
+        ev = np.linalg.eigvalsh(a.astype(np.float64))
+        assert ev.min() > 0
+    if kind == "positive":
+        assert a.min() > 0
+
+
+def test_data_budget_constrains_mep_scale():
+    case = get_case("gemm")
+    tight = MEPConstraints(t_max_s=2.0, r=5, k=1,
+                           s_max_bytes=3 * 384 * 384 * 4)
+    mep = build_mep(case, CPUPlatform(), constraints=tight)
+    assert mep.s_data_bytes <= tight.s_max_bytes
+    assert mep.scale <= 384
+
+
+def test_mep_time_constraint_rejects_large_scales():
+    case = get_case("gemm")
+    mep = build_mep(case, CPUPlatform(), constraints=FAST)
+    # the projected T_overall for the chosen scale respects T_max
+    projected = mep.t_ker_baseline_s * FAST.r * 1.5
+    assert projected <= FAST.t_max_s * 1.5   # probe noise slack
+
+
+# ------------------------------------------------------------- FE / AER ---
+def test_fe_catches_wrong_kernel():
+    case = get_case("gemm")
+    # sabotage: a variant space escape hatch isn't available, so check the
+    # checker directly with mismatched outputs
+    from repro.core.fe import outputs_match
+    a = jnp.ones((4, 4))
+    assert outputs_match(a, a).ok
+    assert not outputs_match(a, a + 1.0).ok
+    assert not outputs_match(a, jnp.ones((4, 5))).ok
+    assert not outputs_match((a,), (a, a)).ok
+    bad = a.at[0, 0].set(jnp.nan)
+    assert not outputs_match(bad, a).ok
+
+
+def test_aer_block_divisibility_repair():
+    case = get_case("gemm")
+    aer = AER(case, scale=384)
+    v = dict(case.baseline_variant, block_m=256)   # 384 % 256 != 0
+    fixed = aer.repair(v, "block shape not divisible", "build")
+    assert fixed is not None
+    assert 384 % fixed["block_m"] == 0
+    assert aer.records and aer.records[0].rule == "block_divisibility"
+
+
+def test_aer_vmem_overflow_repair():
+    """AER shrinks the largest tile on VMEM overflow; repeated application
+    (as the optimizer loop does) drives the working set under budget."""
+    from repro.core.profiler import VMEM_BYTES, variant_vmem_bytes
+    case = get_case("gemm")
+    aer = AER(case, scale=1024)
+    v = dict(case.baseline_variant, block_m=8192, block_n=8192, block_k=8192)
+    for _ in range(16):
+        if variant_vmem_bytes(v) <= VMEM_BYTES:
+            break
+        fixed = aer.repair(v, "RESOURCE_EXHAUSTED: vmem", "compile")
+        assert fixed is not None and fixed != v
+        v = fixed
+    assert variant_vmem_bytes(v) <= VMEM_BYTES
+    assert all(r.rule == "vmem_halve_largest_block" for r in aer.records)
+
+
+def test_aer_fe_precision_repair():
+    case = get_case("gemm")
+    aer = AER(case, scale=256)
+    v = dict(case.baseline_variant, compute_dtype="bf16")
+    fixed = aer.repair(v, "FloatingPointError: FE violation: abs=1e+0", "fe")
+    assert fixed is not None and fixed["compute_dtype"] == "f32"
+
+
+# ------------------------------------------------------------ optimizer ---
+def test_optimize_improves_or_keeps_baseline():
+    case = get_case("vectoradd")
+    res = optimize(case, CPUPlatform(), HeuristicProposer(0),
+                   cfg=FAST_CFG, constraints=FAST)
+    assert res.best_time_s <= res.baseline_time_s * 1.05
+    assert res.speedup >= 0.95
+    # every feasible candidate passed FE
+    for rl in res.rounds:
+        for c in rl.candidates:
+            if c.status == "ok":
+                assert math.isfinite(c.time_s)
+
+
+def test_optimize_tpu_model_prefers_chunked_scan():
+    """Platform B must discover that chunked recurrences beat sequential
+    scans on TPU (the cross-platform result the paper reports)."""
+    case = get_case("rwkv_wkv")
+    res = optimize(case, TPUModelPlatform(), HeuristicProposer(0),
+                   cfg=OptConfig(d_rounds=3, n_candidates=4, r=5, k=1),
+                   constraints=FAST)
+    assert res.best_variant.get("chunked") is True
+    assert res.speedup > 2.0
+
+
+def test_direct_proposer_single_shot():
+    case = get_case("gemm")
+    res = optimize(case, TPUModelPlatform(), DirectProposer(),
+                   cfg=OptConfig(d_rounds=1, n_candidates=1, r=5, k=1),
+                   constraints=FAST)
+    assert len(res.rounds) == 1
+    assert len(res.rounds[0].candidates) == 1
+
+
+# ------------------------------------------------------------ patterns ----
+def test_pattern_inheritance_roundtrip(tmp_path):
+    store = PatternStore(str(tmp_path / "pat.json"))
+    case = get_case("gemm")
+    base = dict(case.baseline_variant)
+    best = dict(base, block_m=128, compute_dtype="bf16")
+    p = store.record(case, "tpu-v5e-model", base, best, gain=2.5)
+    assert p is not None and p.delta == {"block_m": 128,
+                                         "compute_dtype": "bf16"}
+    # reload from disk
+    store2 = PatternStore(str(tmp_path / "pat.json"))
+    hints = store2.suggest(get_case("syrk"), "tpu-v5e-model")
+    assert {"block_m": 128, "compute_dtype": "bf16"} in hints
+    # no-gain patterns are not recorded
+    assert store.record(case, "cpu", base, best, gain=1.0) is None
+
+
+def test_pattern_transfer_accelerates_round1():
+    """PPI: a matmul pattern learned on one kernel appears among round-1
+    candidates for a sibling kernel."""
+    store = PatternStore()
+    case = get_case("gemm")
+    store.record(case, "tpu-v5e-model", dict(case.baseline_variant),
+                 dict(case.baseline_variant, block_m=256, block_n=256),
+                 gain=3.0)
+    prop = HeuristicProposer(0, store, "tpu-v5e-model")
+    from repro.core.proposer import RoundState
+    sib = get_case("syrk")
+    state = RoundState(0, dict(sib.baseline_variant), 1.0, {})
+    cands = prop.propose(sib, state, 4)
+    assert any(c.get("block_m") == 256 and c.get("block_n") == 256
+               for c in cands)
+
+
+# ----------------------------------------------------------- integration --
+def test_integration_install_uninstall():
+    case = get_case("rwkv_wkv")
+    variant = {"chunked": True, "chunk": 32}
+    integrate.install(case, variant)
+    try:
+        assert ops.get_impl("rwkv_wkv") is not None
+    finally:
+        integrate.uninstall(case)
+    assert ops.get_impl("rwkv_wkv") is None
+
+
+def test_emit_script_runs(tmp_path):
+    case = get_case("vectoradd")
+    mep = build_mep(case, CPUPlatform(), constraints=FAST)
+    script = emit_script(mep, {"one_pass": True, "block": 8192})
+    path = tmp_path / "mep_vectoradd.py"
+    path.write_text(script)
+    import subprocess, sys
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, str(path)], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "FE=True" in out.stdout
+
+
+# ----------------------------------------------- variant-space property ---
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_random_variants_preserve_fe(data):
+    """Any point in a case's variant space is functionally equivalent
+    (the optimizer can never trade correctness for speed)."""
+    name = data.draw(st.sampled_from(["atax", "gesummv", "reduction",
+                                      "vectoradd", "dwthaar1d",
+                                      "fastwalshtransform"]))
+    case = get_case(name)
+    variant = {k: data.draw(st.sampled_from(vs))
+               for k, vs in case.variant_space.items()}
+    rtol = 200.0 if variant.get("compute_dtype") == "bf16" else 1.0
+    r = fe_check(case, variant, min(case.scales), n_input_sets=1,
+                 rtol_scale=rtol)
+    assert r.ok, f"{name} {variant}: {r.detail}"
+
+
+# ------------------------------------------------------------ extraction --
+def test_hotspot_extraction_finds_attention_and_matmuls():
+    """Paper §3.1: hotspot kernels are extracted from the application —
+    the jaxpr walker must rank the layer matmuls + attention dots and
+    suggest the ops-registry splice point for the attention hotspot."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core import extraction
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_config("glm4-9b").reduced(),
+                              param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    spots = extraction.profile_hotspots(
+        model.loss, params, {"tokens": toks, "targets": toks}, top=10)
+    assert spots[0].primitive == "dot_general"
+    assert any(s.family == "attention" and s.suggested_site == "attention"
+               for s in spots)
+    # scan-trip multiplication: layer dots were counted n_layers times
+    assert spots[0].count >= cfg.n_layers
+    rep = extraction.report(spots)
+    assert "splice point" in rep

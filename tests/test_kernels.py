@@ -1,0 +1,184 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles in repro.kernels.ref, plus the model-internal chunked
+algorithms vs the sequential references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gemm import grouped_matmul
+from repro.kernels.rwkv_wkv import wkv_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+from repro.kernels.suites.pallas_lib import (elementwise_pallas,
+                                             matmul_pallas,
+                                             reduce_sum_pallas)
+from repro.models.ssm import _ssd_chunked, _wkv_chunked
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 5e-2}
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,H,KV,hd,bq,bk", [
+    (128, 4, 2, 64, 64, 64),
+    (256, 4, 4, 32, 128, 64),
+    (64, 2, 1, 128, 64, 32),
+    (128, 8, 2, 64, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, KV, hd, bq, bk, dtype):
+    q = randn((2, S, H, hd), dtype)
+    k = randn((2, S, KV, hd), dtype)
+    v = randn((2, S, KV, hd), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+def test_flash_attention_noncausal():
+    q, k, v = (randn((1, 128, 4, 32)) for _ in range(3))
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,H,K,chunk", [
+    (64, 2, 16, 16), (128, 4, 32, 32), (96, 2, 16, 32), (128, 2, 64, 64),
+])
+def test_wkv_pallas_sweep(S, H, K, chunk):
+    r = randn((2, S, H, K), scale=0.5)
+    k = randn((2, S, H, K), scale=0.5)
+    v = randn((2, S, H, K), scale=0.5)
+    lw = -jnp.abs(randn((2, S, H, K))) - 0.01
+    u = randn((H, K), scale=0.5)
+    got = wkv_pallas(r, k, v, lw, u, chunk=chunk)
+    want, _ = ref.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_wkv_chunked_model_path_matches_ref():
+    """The model's vectorized 3-phase chunked WKV is exact vs sequential."""
+    r = randn((2, 96, 2, 16), scale=0.5)
+    k = randn((2, 96, 2, 16), scale=0.5)
+    v = randn((2, 96, 2, 16), scale=0.5)
+    lw = -jnp.abs(randn((2, 96, 2, 16))) - 0.01
+    u = randn((2 * 0 + 2, 16), scale=0.5)
+    o, st = _wkv_chunked(r, k, v, lw, u, chunk=16, use_impl=False)
+    want_o, want_st = ref.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want_o),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_st),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,H,P,N,chunk", [
+    (64, 2, 16, 8, 16), (128, 4, 32, 16, 32), (128, 2, 64, 16, 64),
+])
+def test_ssd_pallas_sweep(S, H, P, N, chunk):
+    xh = randn((2, S, H, P))
+    dt = jnp.abs(randn((2, S, H), scale=0.3)) + 0.01
+    a_log = randn((H,), scale=0.3)
+    B_t, C_t = randn((2, S, N)), randn((2, S, N))
+    got = ssd_pallas(xh, dt, a_log, B_t, C_t, chunk=chunk)
+    want, _ = ref.ssd_ref(xh, dt, a_log, B_t, C_t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_model_path_matches_ref():
+    xh = randn((2, 64, 4, 16))
+    dt = jnp.abs(randn((2, 64, 4), scale=0.3)) + 0.01
+    a_log = randn((4,), scale=0.3)
+    B_t, C_t = randn((2, 64, 8)), randn((2, 64, 8))
+    y, st = _ssd_chunked(xh, dt, a_log, B_t, C_t, chunk=16, use_impl=False)
+    want_y, want_st = ref.ssd_ref(xh, dt, a_log, B_t, C_t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_st),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("E,M,K,N,bm,bn,bk", [
+    (4, 64, 32, 48, 32, 32, 16),
+    (2, 128, 128, 128, 128, 64, 64),
+    (8, 32, 16, 32, 64, 64, 64),       # blocks larger than dims → fitted
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(E, M, K, N, bm, bn, bk, dtype):
+    x, w = randn((E, M, K), dtype), randn((E, K, N), dtype)
+    got = grouped_matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.grouped_matmul_ref(x, w)
+    tol = TOL[dtype] * K ** 0.5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N,ep", [(64, 32, 48, "none"),
+                                      (128, 128, 128, "alpha_beta"),
+                                      (96, 64, 32, "relu")])
+def test_matmul_pallas(M, K, N, ep):
+    a, b = randn((M, K)), randn((K, N))
+    c = randn((M, N))
+    got = matmul_pallas(a, b, c if ep == "alpha_beta" else None,
+                        block_m=32, block_n=32, block_k=32, epilogue=ep,
+                        alpha=1.5, beta=1.2)
+    want = a @ b
+    if ep == "alpha_beta":
+        want = 1.5 * want + 1.2 * c
+    elif ep == "relu":
+        want = jnp.maximum(want, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_reduce_and_elementwise_pallas():
+    x = randn((8192,))
+    np.testing.assert_allclose(float(reduce_sum_pallas(x, block=1024)),
+                               float(jnp.sum(x)), rtol=1e-5, atol=1e-3)
+    y = randn((8192,))
+    np.testing.assert_allclose(
+        np.asarray(elementwise_pallas(lambda a, b: a + b, x, y, block=2048)),
+        np.asarray(x + y), rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_registry_integration():
+    """Installing a pallas flash-attention variant changes the model's
+    attention path but not its outputs."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_config("glm4-9b").reduced(),
+                              param_dtype="float32")
+    model = get_model(cfg, q_chunk=16)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    base, _, _ = model.forward(params, toks)
+
+    def impl(q, k, v, causal=True, softcap=0.0):
+        return flash_attention(q, k, v, causal=causal,
+                               block_q=16, block_k=16)
+
+    with ops.use_impl("attention", impl):
+        swapped, _, _ = model.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(swapped),
+                               rtol=5e-3, atol=5e-3)
