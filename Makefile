@@ -1,0 +1,13 @@
+.PHONY: verify bench bench-full
+
+# Tier-1 tests (ROADMAP.md)
+verify:
+	./scripts/verify.sh
+
+# Campaign-engine benchmark tables (CI-scale parameters)
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --tables 1,2
+
+# Paper-scale parameters (D=6/10, N=3/5, R=30, k=3) — slow
+bench-full:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --full

@@ -1,9 +1,14 @@
-"""Shared benchmark machinery: one function per paper table.
+"""Shared benchmark machinery: one function per paper table, all driven
+through the campaign engine.
 
-Each table runs the full MEP pipeline per kernel and reports the paper's
-three indicators: Standalone speedup (in the MEP), Integrated speedup
-(kernel reinstalled in the application / composite context), and Direct
-LLM Optimization (one-shot, no feedback loop).
+Each table submits its whole suite to a ``Campaign`` — the heuristic
+(iterative, paper §3.2) and direct (one-shot baseline) jobs for every
+kernel — and reports the paper's three indicators: Standalone speedup
+(in the MEP), Integrated speedup (kernel reinstalled in the application
+/ composite context), and Direct LLM Optimization (one-shot, no feedback
+loop).  A ``BenchContext`` threads the shared PatternStore, EvalCache,
+and ResultsDB through the tables, so cross-table Performance Pattern
+Inheritance and cross-run evaluation caching both happen automatically.
 
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is the
 optimized kernel's trimmed-mean time and ``derived`` carries the speedups.
@@ -12,15 +17,13 @@ default CI mode shrinks R/D so the whole suite stays minutes-scale.
 """
 from __future__ import annotations
 
-import json
 import os
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from repro.core import (CPUPlatform, DirectProposer, HeuristicProposer,
-                        MEPConstraints, OptConfig, PatternStore,
-                        TPUModelPlatform, build_mep, get_case, optimize)
+from repro.core import (Campaign, CaseJob, DirectProposer, EvalCache,
+                        HeuristicProposer, MEPConstraints, OptConfig,
+                        PatternStore, ResultsDB)
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -37,12 +40,41 @@ def params_for(suite: str):
 
 
 @dataclass
+class BenchContext:
+    """Shared campaign state flowing through the tables."""
+    store: PatternStore
+    cache: Optional[EvalCache] = None
+    db: Optional[ResultsDB] = None
+    max_workers: Optional[int] = None
+
+    def campaign(self, platform) -> Campaign:
+        # --jobs only applies to concurrency-safe (analytic) platforms;
+        # measured platforms keep the engine's one-worker clamp so a
+        # global override can't corrupt eq. 3 wall-clock timing.
+        workers = self.max_workers \
+            if getattr(platform, "concurrency_safe", False) else None
+        return Campaign(platform, patterns=self.store, cache=self.cache,
+                        db=self.db, max_workers=workers, verbose=True)
+
+
+def ensure_ctx(ctx) -> BenchContext:
+    """Accept a BenchContext, a bare PatternStore (legacy call sites), or
+    None (standalone table run)."""
+    if ctx is None:
+        return BenchContext(PatternStore())
+    if isinstance(ctx, PatternStore):
+        return BenchContext(ctx)
+    return ctx
+
+
+@dataclass
 class Row:
     name: str
     us_per_call: float
     standalone: float
     integrated: Optional[float]
     direct: float
+    cache_hits: int = 0
 
     def csv(self) -> str:
         integ = f"{self.integrated:.2f}" if self.integrated else ""
@@ -51,22 +83,29 @@ class Row:
                 f"direct={self.direct:.2f}x")
 
 
-def run_suite(suite: str, platform, store: PatternStore, *,
+def run_suite(suite: str, platform, ctx, *,
               integrated_fn=None, seed: int = 0) -> List[Row]:
+    ctx = ensure_ctx(ctx)
     cfg, cons = params_for(suite)
+    direct_cfg = OptConfig(d_rounds=1, n_candidates=1, r=cfg.r, k=cfg.k,
+                           fe_input_sets=cfg.fe_input_sets)
+    suite_cases = _suite_cases(suite)
+    jobs: List[CaseJob] = []
+    for case in suite_cases:
+        jobs.append(CaseJob(case, HeuristicProposer(seed, ctx.store,
+                                                    platform.name),
+                            cfg=cfg, constraints=cons, seed=seed))
+        jobs.append(CaseJob(case, DirectProposer(), cfg=direct_cfg,
+                            constraints=cons, seed=seed,
+                            label=f"{case.name}#direct"))
+    results = ctx.campaign(platform).run(jobs)
     rows: List[Row] = []
-    for case in _suite_cases(suite):
-        mep = build_mep(case, platform, constraints=cons, seed=seed)
-        res = optimize(case, platform, HeuristicProposer(seed, store,
-                                                         platform.name),
-                       cfg=cfg, constraints=cons, patterns=store, mep=mep)
-        direct = optimize(case, platform, DirectProposer(),
-                          cfg=OptConfig(d_rounds=1, n_candidates=1,
-                                        r=cfg.r, k=cfg.k),
-                          constraints=cons, mep=mep)
+    for i, case in enumerate(suite_cases):
+        res, direct = results[2 * i], results[2 * i + 1]
         integ = integrated_fn(case, res) if integrated_fn else None
         rows.append(Row(case.name, res.best_time_s * 1e6, res.speedup,
-                        integ, direct.speedup))
+                        integ, direct.speedup,
+                        cache_hits=res.cache_hits + direct.cache_hits))
         print(rows[-1].csv(), flush=True)
     return rows
 
@@ -84,6 +123,7 @@ def summarize(table: str, rows: List[Row]) -> Dict:
         "avg_standalone": avg([r.standalone for r in rows]),
         "avg_integrated": avg([r.integrated for r in rows]),
         "avg_direct": avg([r.direct for r in rows]),
+        "cache_hits": int(sum(r.cache_hits for r in rows)),
         "rows": [r.csv() for r in rows],
     }
     print(f"# {table}: avg standalone {rec['avg_standalone']:.2f}x, "

@@ -1,23 +1,41 @@
-"""Benchmark runner: one function per paper table.
+"""Benchmark runner: one function per paper table, on the campaign engine.
 
 Prints ``name,us_per_call,derived`` CSV per kernel plus per-table averages,
 and writes the aggregate JSON next to the dry-run results.
 
   PYTHONPATH=src python -m benchmarks.run [--tables 1,2,3,4] [--full]
+                                          [--jobs N] [--out results/bench.json]
 
 ``--full`` (or REPRO_BENCH_FULL=1) uses the paper's parameters
 (D=6/10, N=3/5, R=30, k=3); default CI mode keeps the suite minutes-scale.
-A shared PatternStore flows Table1 -> Table2 -> Table3 -> Table4, reproducing
-the paper's cross-kernel and cross-platform Performance Pattern
-Inheritance.
+A shared PatternStore flows Table1 -> Table2 -> Table3 -> Table4,
+reproducing the paper's cross-kernel and cross-platform Performance
+Pattern Inheritance, and a shared EvalCache (persisted as JSONL next to
+``--out``) guarantees that re-running a table against the same results
+database never rebuilds/re-checks/re-times a variant it has already
+evaluated.  The output JSON is stamped with the git SHA, platform name,
+and campaign wall-clock so BENCH_*.json snapshots are comparable across
+PRs.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import sys
+import platform as _platform
+import subprocess
 import time
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def main() -> None:
@@ -26,36 +44,72 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper iteration parameters (slow)")
     ap.add_argument("--out", default="results/bench.json")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="campaign workers (default: env/platform policy)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent evaluation cache")
     args = ap.parse_args()
     if args.full:
         os.environ["REPRO_BENCH_FULL"] = "1"
 
-    from repro.core import PatternStore
+    from repro.core import EvalCache, PatternStore, ResultsDB
+    from benchmarks.common import BenchContext
     from benchmarks import (table1_polybench_a, table2_polybench_b,
                             table3_appsdk, table4_hotspots)
 
-    store = PatternStore(os.path.join(os.path.dirname(args.out) or ".",
-                                      "patterns.json")
-                         if args.out else None)
+    if args.out:
+        res_dir = os.path.dirname(args.out) or "."
+        os.makedirs(res_dir, exist_ok=True)
+        cache = None if args.no_cache else EvalCache(
+            os.path.join(res_dir, "evalcache.jsonl"))
+        ctx = BenchContext(
+            store=PatternStore(os.path.join(res_dir, "patterns.json")),
+            cache=cache,
+            db=ResultsDB(os.path.join(res_dir, "campaign.jsonl")),
+            max_workers=args.jobs)
+    else:           # --out '': leave no state on disk
+        cache = None if args.no_cache else EvalCache()
+        ctx = BenchContext(store=PatternStore(), cache=cache,
+                           max_workers=args.jobs)
+
     tables = {
         "1": ("table1_polybench_a", table1_polybench_a.main),
         "2": ("table2_polybench_b", table2_polybench_b.main),
         "3": ("table3_appsdk", table3_appsdk.main),
         "4": ("table4_hotspots", table4_hotspots.main),
     }
+    table_ids = [t.strip() for t in args.tables.split(",")]
+    for tid in table_ids:
+        if tid not in tables:
+            ap.error(f"unknown table {tid!r}; choose from "
+                     f"{','.join(sorted(tables))}")
     results = {}
     t0 = time.time()
-    for tid in args.tables.split(","):
-        name, fn = tables[tid.strip()]
+    for tid in table_ids:
+        name, fn = tables[tid]
         print(f"== {name} ==", flush=True)
-        results[name] = fn(store)
+        results[name] = fn(ctx)
     results["wall_s"] = round(time.time() - t0, 1)
-    results["patterns_learned"] = len(store)
+    results["patterns_learned"] = len(ctx.store)
+    # provenance stamp: BENCH_*.json snapshots comparable across PRs
+    results["meta"] = {
+        "git_sha": _git_sha(),
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "campaign_wall_s": results["wall_s"],
+        "full": os.environ.get("REPRO_BENCH_FULL", "0") == "1",
+    }
+    if cache:
+        stats = cache.stats()
+        results["evalcache"] = stats
+        where = "persisted" if cache.path else "in-memory"
+        print(f"# evalcache: {stats['hits']} hits / {stats['misses']} misses "
+              f"this run ({stats['entries']} entries, {where})", flush=True)
     if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, default=str)
-    print(f"# done in {results['wall_s']}s; patterns learned: {len(store)}")
+    print(f"# done in {results['wall_s']}s; patterns learned: "
+          f"{len(ctx.store)}")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, run_suite, summarize
-from repro.core import CPUPlatform, PatternStore
+from benchmarks.common import ensure_ctx, run_suite, summarize
+from repro.core import CPUPlatform
 from repro.core.datagen import generate
 from repro.core.profiler import wallclock
 
@@ -36,9 +36,9 @@ def integrated_fn(case, res):
     return t_base.trimmed_mean_s / max(t_opt.trimmed_mean_s, 1e-12)
 
 
-def main(store: PatternStore = None):
-    store = store if store is not None else PatternStore()
-    rows = run_suite("polybench", CPUPlatform(), store,
+def main(ctx=None):
+    ctx = ensure_ctx(ctx)
+    rows = run_suite("polybench", CPUPlatform(), ctx,
                      integrated_fn=integrated_fn)
     return summarize("table1_polybench_platformA", rows)
 

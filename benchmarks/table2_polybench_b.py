@@ -8,9 +8,9 @@ Also reports rounds-to-best with and without PPI (the convergence
 acceleration claim)."""
 from __future__ import annotations
 
-from benchmarks.common import params_for, run_suite, summarize
+from benchmarks.common import ensure_ctx, params_for, run_suite, summarize
 from repro.core import (HeuristicProposer, PatternStore, TPUModelPlatform,
-                        build_mep, optimize)
+                        optimize)
 
 
 def integrated_fn(case, res):
@@ -53,12 +53,12 @@ def ppi_convergence(store: PatternStore):
     return out
 
 
-def main(store: PatternStore = None):
-    store = store if store is not None else PatternStore()
-    rows = run_suite("polybench", TPUModelPlatform(), store,
+def main(ctx=None):
+    ctx = ensure_ctx(ctx)
+    rows = run_suite("polybench", TPUModelPlatform(), ctx,
                      integrated_fn=integrated_fn)
     rec = summarize("table2_polybench_platformB", rows)
-    rec["ppi_convergence"] = ppi_convergence(store)
+    rec["ppi_convergence"] = ppi_convergence(ctx.store)
     return rec
 
 

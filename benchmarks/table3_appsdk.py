@@ -3,15 +3,15 @@ numbers follow the paper's DCU platform = our TPU model, with the measured
 CPU loop as the secondary check."""
 from __future__ import annotations
 
-from benchmarks.common import run_suite, summarize
-from repro.core import CPUPlatform, PatternStore, TPUModelPlatform
+from benchmarks.common import ensure_ctx, run_suite, summarize
+from repro.core import CPUPlatform, TPUModelPlatform
 
 
-def main(store: PatternStore = None):
-    store = store if store is not None else PatternStore()
-    rows = run_suite("appsdk", TPUModelPlatform(), store)
+def main(ctx=None):
+    ctx = ensure_ctx(ctx)
+    rows = run_suite("appsdk", TPUModelPlatform(), ctx)
     rec = summarize("table3_appsdk_platformB", rows)
-    rows_cpu = run_suite("appsdk", CPUPlatform(), store)
+    rows_cpu = run_suite("appsdk", CPUPlatform(), ctx)
     rec_cpu = summarize("table3_appsdk_platformA", rows_cpu)
     rec["platformA"] = rec_cpu
     return rec

@@ -14,9 +14,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import run_suite, summarize
-from repro.core import (CPUPlatform, PatternStore, TPUModelPlatform,
-                        integrate)
+from benchmarks.common import ensure_ctx, run_suite, summarize
+from repro.core import CPUPlatform, TPUModelPlatform, integrate
 from repro.configs import get_config
 from repro.models import get_model
 
@@ -57,16 +56,16 @@ def integrated_fn(case, res):
     return ir.integrated_speedup
 
 
-def main(store: PatternStore = None):
-    store = store if store is not None else PatternStore()
+def main(ctx=None):
+    ctx = ensure_ctx(ctx)
     # Paper protocol: standalone and integrated are measured on the SAME
     # platform.  Platform A (CPU) actually executes the application, so its
     # winners are what we reinstall and validate end-to-end; Platform B
     # (TPU model) gives the target-hardware standalone row.
-    rows_a = run_suite("hpc", CPUPlatform(), store,
+    rows_a = run_suite("hpc", CPUPlatform(), ctx,
                        integrated_fn=integrated_fn)
     rec = summarize("table4_hpc_hotspots_platformA", rows_a)
-    rows_b = run_suite("hpc", TPUModelPlatform(), store)
+    rows_b = run_suite("hpc", TPUModelPlatform(), ctx)
     rec_b = summarize("table4_hpc_hotspots_platformB_standalone", rows_b)
     rec["platformB_standalone"] = rec_b
     return rec

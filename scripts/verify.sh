@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command from ROADMAP.md, runnable from
+# anywhere via `make verify` or `scripts/verify.sh [pytest args...]`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -15,6 +15,10 @@ from repro.core.patterns import Pattern, PatternStore
 from repro.core.proposer import (DirectProposer, HeuristicProposer,
                                  LLMProposer, OfflineError, Proposer,
                                  RoundState, make_proposer)
-from repro.core.optimizer import OptConfig, OptResult, optimize
+from repro.core.evalcache import (EvalCache, EvalRecord, ResultsDB,
+                                  canonical_spec, spec_key)
+from repro.core.optimizer import (CandidateLog, Evaluator, OptConfig,
+                                  OptResult, RoundLog, optimize)
+from repro.core.campaign import Campaign, CaseJob
 from repro.core import integrate
 from repro.core import extraction

@@ -1,0 +1,246 @@
+"""Campaign engine: concurrent multi-kernel optimization (paper §3.2).
+
+The paper optimizes one hotspot at a time inside its MEP; a *campaign*
+runs the same §3.2 round structure over many ``KernelCase``s at once:
+
+    for each case (concurrently, over a bounded worker pool):
+        d = 0..D-1:                                  eq. 5 outer loop
+            propose N candidates from K^(d)          (LLM / heuristic)
+            evaluate each: build → FE → time         eq. 3–4, AER-wrapped
+            K^(d+1) = argmin over the feasible set   eq. 5
+            stop when the round's gain ≤ 1 + eps     (uniform early stop)
+        record the winning delta into the PatternStore (PPI)
+
+What the engine adds over a serial loop:
+
+* **Bounded concurrency** — cases are scheduled onto a worker pool.
+  Platforms advertise ``concurrency_safe``; measured platforms (CPU
+  wall-clock) are clamped to one worker so parallel timing can't pollute
+  eq. 3's trimmed mean, while model platforms (analytic roofline) fan
+  out fully.  Override with ``max_workers`` / REPRO_CAMPAIGN_WORKERS.
+* **Shared evaluation cache** — every build/FE/time outcome is
+  content-addressed in an ``EvalCache`` keyed by the full evaluation
+  spec, so duplicate candidates (across proposers, cases, rounds, or a
+  previous campaign run against the same cache file) are never paid for
+  twice.  In-flight dedup means two workers racing on the same key do
+  the work once.
+* **MEP dedup** — jobs that target the same (case, platform, seed,
+  constraints) share one MEP, so input generation and scale probing
+  happen once per case per campaign.
+* **Persistent results DB** — campaign_start / round / case_result /
+  campaign_end records are journaled to JSONL (``ResultsDB``) so a
+  campaign's trajectory survives restarts and backs the BENCH_*
+  snapshots compared across PRs.
+
+``repro.core.optimizer.optimize`` remains the serial API: it is a
+one-case campaign with ``max_workers=1`` and no cache unless given one.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.aer import AER
+from repro.core.evalcache import EvalCache, ResultsDB
+from repro.core.kernelcase import KernelCase
+from repro.core.mep import MEP, MEPConstraints, build_mep
+from repro.core.optimizer import (CandidateLog, Evaluator, OptConfig,
+                                  OptResult, RoundLog)
+from repro.core.patterns import PatternStore
+from repro.core.profiler import Platform
+from repro.core.proposer import Proposer, RoundState
+
+
+@dataclass
+class CaseJob:
+    """One unit of campaign work: optimize ``case`` with ``proposer``."""
+    case: KernelCase
+    proposer: Proposer
+    cfg: OptConfig = OptConfig()
+    constraints: MEPConstraints = MEPConstraints()
+    seed: int = 0
+    mep: Optional[MEP] = None       # pre-built MEP (else built & shared)
+    label: str = ""                 # distinguishes jobs on the same case
+
+    @property
+    def name(self) -> str:
+        return self.label or self.case.name
+
+
+class Campaign:
+    """Scheduler that optimizes many kernels concurrently with shared
+    evaluation cache, pattern store, and results journal."""
+
+    def __init__(self, platform: Platform, *,
+                 patterns: Optional[PatternStore] = None,
+                 cache: Optional[EvalCache] = None,
+                 db: Optional[ResultsDB] = None,
+                 max_workers: Optional[int] = None,
+                 verbose: bool = False):
+        self.platform = platform
+        self.patterns = patterns
+        self.cache = cache
+        self.db = db
+        self.verbose = verbose
+        if max_workers is None:
+            max_workers = int(os.environ.get("REPRO_CAMPAIGN_WORKERS", "4"))
+            if not getattr(platform, "concurrency_safe", False):
+                # measured wall-clock: parallel timing corrupts eq. 3
+                max_workers = 1
+        self.max_workers = max(1, max_workers)
+        self._mep_lock = threading.Lock()
+        self._mep_locks: Dict[Tuple, threading.Lock] = {}
+        self._meps: Dict[Tuple, MEP] = {}
+
+    # ------------------------------------------------------------------
+    def run(self, jobs: List[CaseJob]) -> List[OptResult]:
+        """Run all jobs; the result list matches the job order.
+
+        One failing job does not abort the others: every job runs to
+        completion, the journal gets its campaign_end record either way,
+        and only then is the first failure re-raised."""
+        campaign_id = f"c{os.getpid():x}-{int(time.time() * 1e3):x}"
+        t0 = time.time()
+        if self.db:
+            self.db.append("campaign_start", id=campaign_id,
+                           platform=self.platform.name,
+                           workers=self.max_workers,
+                           jobs=[j.name for j in jobs])
+
+        def guarded(job: CaseJob):
+            try:
+                return self._optimize_case(job, campaign_id)
+            except Exception as e:  # noqa: BLE001 — isolate job failures
+                return e
+
+        if self.max_workers == 1 or len(jobs) == 1:
+            outcomes = [guarded(j) for j in jobs]
+        else:
+            with ThreadPoolExecutor(self.max_workers) as ex:
+                outcomes = [f.result() for f in
+                            [ex.submit(guarded, j) for j in jobs]]
+        failures = [(j, o) for j, o in zip(jobs, outcomes)
+                    if isinstance(o, Exception)]
+        if self.db:
+            self.db.append(
+                "campaign_end", id=campaign_id,
+                wall_s=round(time.time() - t0, 3),
+                cache=self.cache.stats() if self.cache else None,
+                results=[o.to_dict() for o in outcomes
+                         if isinstance(o, OptResult)],
+                errors=[{"job": j.name,
+                         "error": f"{type(e).__name__}: {e}"[:300]}
+                        for j, e in failures])
+        if failures:
+            job, err = failures[0]
+            raise RuntimeError(
+                f"campaign job {job.name!r} failed "
+                f"({len(failures)}/{len(jobs)} jobs failed)") from err
+        return outcomes
+
+    # ------------------------------------------------------------------
+    def _get_mep(self, job: CaseJob) -> MEP:
+        key = (job.case.name, self.platform.name, job.seed, job.constraints)
+        with self._mep_lock:
+            lk = self._mep_locks.setdefault(key, threading.Lock())
+        with lk:
+            if key not in self._meps:
+                self._meps[key] = job.mep or build_mep(
+                    job.case, self.platform, constraints=job.constraints,
+                    seed=job.seed)
+            return self._meps[key]
+
+    def _optimize_case(self, job: CaseJob, campaign_id: str) -> OptResult:
+        """The paper's §3.2 search loop for one kernel (serial per case;
+        concurrency happens across cases)."""
+        t_start = time.time()
+        case, proposer, cfg = job.case, job.proposer, job.cfg
+        mep = self._get_mep(job)
+        aer = AER(case, mep.scale)
+        evaluator = Evaluator(mep, case, self.platform.name, aer, proposer,
+                              cfg, cache=self.cache)
+
+        baseline_v = dict(case.baseline_variant)
+        t_base = evaluator.measure_baseline(baseline_v)
+        best_v, best_t = baseline_v, t_base
+        res = OptResult(case.name, self.platform.name, proposer.name,
+                        baseline_v, t_base, best_v, best_t,
+                        mep_log=list(mep.log))
+
+        history: List[Dict[str, Any]] = []
+        errors: List[str] = []
+        for d in range(cfg.d_rounds):
+            state = RoundState(
+                round=d, baseline_variant=best_v, baseline_time_s=best_t,
+                feedback=self.platform.profile_feedback(case, best_v,
+                                                        mep.scale),
+                history=history, errors=errors)
+            cands = proposer.propose(case, state, cfg.n_candidates)
+            rl = RoundLog(round=d, baseline_time_s=best_t)
+            for v in cands:
+                cl = evaluator.evaluate(v)
+                rl.candidates.append(cl)
+                history.append({"variant": cl.variant, "time_s": cl.time_s,
+                                "status": cl.status})
+                if cl.status != "ok":
+                    errors.append(cl.error)
+            feasible = [c for c in rl.candidates if c.status == "ok"]
+            # eq. 5 argmin + uniform early stop: ANY round (round 0
+            # included) that fails to improve by > eps ends the loop,
+            # with the reason logged.
+            stop = ""
+            if not feasible:
+                stop = "no feasible candidates"
+            else:
+                winner = min(feasible, key=lambda c: c.time_s)
+                rl.best_time_s = winner.time_s
+                gain = best_t / winner.time_s if winner.time_s else float("inf")
+                if winner.time_s < best_t:
+                    best_v, best_t = winner.variant, winner.time_s
+                rl.improved = gain > 1.0 + cfg.improve_eps
+                if not rl.improved:
+                    if gain <= 1.0:
+                        stop = (f"winner did not beat baseline "
+                                f"(gain {gain:.4f}x)")
+                    else:
+                        stop = (f"round gain {gain:.4f}x below threshold "
+                                f"{1.0 + cfg.improve_eps:.4f}x")
+            rl.stop_reason = stop
+            res.rounds.append(rl)
+            if self.db:
+                self.db.append(
+                    "round", campaign=campaign_id, job=job.name,
+                    case=case.name, round=d,
+                    baseline_time_s=rl.baseline_time_s,
+                    best_time_s=rl.best_time_s, improved=rl.improved,
+                    stop_reason=stop,
+                    candidates=[{"variant": c.variant, "status": c.status,
+                                 "time_s": c.time_s, "cached": c.cached}
+                                for c in rl.candidates])
+            if stop:
+                res.mep_log.append(f"round {d}: stopped ({stop})")
+                res.stop_reason = stop
+                break
+        if not res.stop_reason:
+            res.stop_reason = f"d_rounds={cfg.d_rounds} exhausted"
+
+        res.best_variant, res.best_time_s = best_v, best_t
+        res.aer_records = len(aer.records)
+        res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
+        res.wall_s = time.time() - t_start
+        if self.patterns is not None:
+            self.patterns.record(case, self.platform.name, baseline_v,
+                                 best_v, res.speedup)
+        if self.db:
+            self.db.append("case_result", campaign=campaign_id,
+                           job=job.name, **res.to_dict())
+        if self.verbose:
+            print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
+                  f"{res.speedup:.2f}x over baseline, "
+                  f"{len(res.rounds)} rounds, {res.cache_hits} cache hits "
+                  f"[{res.stop_reason}]", flush=True)
+        return res

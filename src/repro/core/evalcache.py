@@ -1,0 +1,219 @@
+"""Shared evaluation cache + persistent campaign results database.
+
+The paper's framework amortizes optimization cost by never paying the
+full-application build per candidate; the campaign engine extends the
+same economics across candidates: a **content-addressed cache** keyed by
+the complete evaluation spec — (case, variant, scale, platform) plus the
+timing/FE parameters that affect the outcome — guarantees that no
+variant is ever built, FE-checked, or timed twice, within a campaign or
+across restarts (the cache persists as append-only JSONL).
+
+Two layers live here:
+
+* ``EvalCache``  — the content-addressed store.  ``get_or_compute`` is
+  the only entry point workers need: it returns a cached record, waits
+  on an in-flight computation of the same key (cross-case candidate
+  dedup under concurrency), or runs the computation and publishes it.
+* ``ResultsDB``  — the campaign manifest: an append-only JSONL journal
+  of campaign_start / round / case_result / campaign_end records that
+  survives restarts and backs the BENCH_* trajectory across PRs.
+
+Caveat for *measured* platforms (CPU wall-clock): a persisted timing
+replays the machine conditions under which it was taken, so a cache
+file reused across very different load conditions can mix stale and
+fresh measurements in one speedup ratio.  Analytic platforms are immune
+(timings are pure functions of the spec).  Delete the cache file — or
+run with ``--no-cache`` — when measured numbers must be all-fresh; see
+ROADMAP "Eval-cache invalidation" for the planned digest/namespace fix.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+from repro.core.kernelcase import Variant
+
+
+def canonical_spec(case_name: str, variant: Variant, scale: int,
+                   platform: str, *, kind: str = "eval",
+                   **params: Any) -> Dict[str, Any]:
+    """The full evaluation spec.  ``kind`` separates measure-only records
+    (baseline timing, no FE) from full build→FE→time evaluations;
+    ``params`` carries whatever else changes the outcome (r, k, FE input
+    sets, ...)."""
+    spec: Dict[str, Any] = {
+        "kind": kind, "case": case_name,
+        "variant": {k: variant[k] for k in sorted(variant)},
+        "scale": int(scale), "platform": platform,
+    }
+    spec.update(params)
+    return spec
+
+
+def spec_key(spec: Dict[str, Any]) -> str:
+    blob = json.dumps(spec, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:20]
+
+
+def json_safe(obj: Any) -> Any:
+    """Recursively replace non-finite floats with None: json.dumps would
+    emit the non-RFC token ``Infinity``, breaking strict JSONL consumers
+    of the cache/journal files."""
+    if isinstance(obj, float):
+        return obj if obj == obj and abs(obj) != float("inf") else None
+    if isinstance(obj, dict):
+        return {k: json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    return obj
+
+
+@dataclass
+class EvalRecord:
+    status: str = "ok"            # ok | build_error | fe_fail | run_error
+    time_s: float = float("inf")
+    fe_abs_err: float = 0.0
+    repairs: int = 0
+    error: str = ""
+    final_variant: Dict[str, Any] = field(default_factory=dict)
+    key: str = ""
+    spec: Dict[str, Any] = field(default_factory=dict)
+    ts: float = 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return json_safe(asdict(self))
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "EvalRecord":
+        rec = EvalRecord(**{k: d[k] for k in
+                            ("status", "time_s", "fe_abs_err", "repairs",
+                             "error", "final_variant", "key", "spec", "ts")
+                            if k in d})
+        if rec.time_s is None:       # json_safe maps inf → None on disk
+            rec.time_s = float("inf")
+        return rec
+
+
+class EvalCache:
+    """Thread-safe content-addressed evaluation cache with optional JSONL
+    persistence.  Duplicate keys on disk resolve to the last record."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._records: Dict[str, EvalRecord] = {}
+        self._pending: Dict[str, threading.Event] = {}
+        self.hits = 0
+        self.misses = 0
+        self.waits = 0        # in-flight dedup: waited on another worker
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = EvalRecord.from_dict(json.loads(line))
+                    except (ValueError, TypeError, KeyError):
+                        # a crash mid-append leaves a torn line; losing
+                        # one record must not lose the whole cache
+                        continue
+                    if rec.key:
+                        self._records[rec.key] = rec
+
+    # ------------------------------------------------------------------
+    def lookup(self, spec: Dict[str, Any]) -> Optional[EvalRecord]:
+        with self._lock:
+            return self._records.get(spec_key(spec))
+
+    def get_or_compute(self, spec: Dict[str, Any],
+                       compute: Callable[[], EvalRecord]
+                       ) -> Tuple[EvalRecord, bool]:
+        """Return ``(record, was_hit)``.  If another worker is already
+        computing the same key, wait for its result instead of
+        recomputing (no variant is evaluated twice, even concurrently)."""
+        key = spec_key(spec)
+        while True:
+            with self._lock:
+                rec = self._records.get(key)
+                if rec is not None:
+                    self.hits += 1
+                    return rec, True
+                ev = self._pending.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._pending[key] = ev
+                    break
+                self.waits += 1
+            ev.wait()
+        try:
+            rec = compute()
+            rec.key, rec.spec, rec.ts = key, spec, time.time()
+            with self._lock:
+                self._records[key] = rec
+                self.misses += 1
+                self._append(rec)
+            return rec, False
+        finally:
+            with self._lock:
+                self._pending.pop(key, None)
+            ev.set()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "waits": self.waits, "entries": len(self._records)}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    # ------------------------------------------------------------------
+    def _append(self, rec: EvalRecord) -> None:
+        # caller holds self._lock
+        if not self.path:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec.to_dict(), default=str) + "\n")
+
+
+class ResultsDB:
+    """Append-only JSONL journal of campaign progress.  Each line is a
+    self-describing record: {"kind": ..., "ts": ..., **fields}."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+
+    def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
+        rec = json_safe({"kind": kind, "ts": time.time(), **fields})
+        with self._lock:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+        return rec
+
+    def records(self, kind: Optional[str] = None) -> Iterator[Dict[str, Any]]:
+        if not os.path.exists(self.path):
+            return
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:     # torn line from a crashed writer
+                    continue
+                if kind is None or rec.get("kind") == kind:
+                    yield rec

@@ -4,25 +4,31 @@ Round d: the proposer generates up to N candidates from the current
 baseline K^(d); each candidate is built (AER on failure), checked for
 functional equivalence (eq. 4, AER on failure), and timed with the
 R-run trimmed mean (eq. 3).  The feasible-set argmin becomes K^(d+1)
-(eq. 5).  The loop stops at d=D or when the round's improvement falls
-below the preset threshold.  Winning strategies are summarized into the
-Performance Pattern Inheritance store.
+(eq. 5).  The loop stops at d=D or after any round whose best candidate
+fails to beat the incumbent by more than the preset threshold.  Winning
+strategies are summarized into the Performance Pattern Inheritance store.
+
+This module holds the *per-candidate* half of the pipeline: the
+``Evaluator`` runs build → FE → time for one candidate (each stage
+AER-wrapped) and consults the shared ``EvalCache`` so no variant is ever
+evaluated twice.  The *search* half — the round loop and the scheduler
+that runs many kernels concurrently — lives in ``repro.core.campaign``;
+``optimize()`` below is kept as a thin wrapper over a one-case campaign
+so existing callers and tests are unaffected.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import jax
-
 from repro.core.aer import AER
 from repro.core import fe as fe_mod
+from repro.core.evalcache import EvalCache, EvalRecord, canonical_spec
 from repro.core.kernelcase import KernelCase, Variant
-from repro.core.mep import MEP, MEPConstraints, build_mep
+from repro.core.mep import MEP, MEPConstraints
 from repro.core.patterns import PatternStore
 from repro.core.profiler import Platform
-from repro.core.proposer import Proposer, RoundState
+from repro.core.proposer import Proposer
 
 
 @dataclass(frozen=True)
@@ -45,6 +51,7 @@ class CandidateLog:
     fe_abs_err: float = 0.0
     repairs: int = 0
     error: str = ""
+    cached: bool = False         # served from the shared EvalCache
 
 
 @dataclass
@@ -54,6 +61,7 @@ class RoundLog:
     candidates: List[CandidateLog] = field(default_factory=list)
     best_time_s: float = float("inf")
     improved: bool = False
+    stop_reason: str = ""        # non-empty → the loop stopped after this round
 
 
 @dataclass
@@ -69,6 +77,9 @@ class OptResult:
     mep_log: List[str] = field(default_factory=list)
     aer_records: int = 0
     wall_s: float = 0.0
+    stop_reason: str = ""
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def speedup(self) -> float:
@@ -82,44 +93,124 @@ class OptResult:
             "best_time_s": self.best_time_s,
             "best_variant": self.best_variant,
             "rounds": len(self.rounds), "aer_records": self.aer_records,
-            "wall_s": self.wall_s,
+            "wall_s": self.wall_s, "stop_reason": self.stop_reason,
+            "cache_hits": self.cache_hits, "cache_misses": self.cache_misses,
         }
 
 
-def _evaluate(mep: MEP, case: KernelCase, variant: Variant, aer: AER,
-              proposer: Proposer, cfg: OptConfig) -> CandidateLog:
-    """build → FE → time, with AER-driven retries at each stage."""
-    v = dict(variant)
-    repairs = 0
-    while True:
-        stage = "build"
-        try:
-            fe_scale = cfg.fe_scale or min(mep.scale, min(case.scales))
-            stage = "fe"
-            rtol_scale = 200.0 if v.get("compute_dtype") == "bf16" else 1.0
-            r = fe_mod.check(case, v, fe_scale, impl="jnp",
-                             n_input_sets=cfg.fe_input_sets,
-                             rtol_scale=rtol_scale)
-            if not r.ok:
-                raise FloatingPointError(f"FE violation: {r.detail}")
-            if cfg.check_pallas:
-                rp = fe_mod.check(case, v, fe_scale, impl="pallas",
-                                  n_input_sets=1, rtol_scale=4.0)
-                if not rp.ok:
-                    raise FloatingPointError(f"FE(pallas) violation: {rp.detail}")
-            stage = "run"
-            t = mep.measure(v, r=cfg.r, k=cfg.k)
-            return CandidateLog(v, "ok", t.trimmed_mean_s,
-                                fe_abs_err=r.max_abs_err, repairs=repairs)
-        except Exception as e:  # noqa: BLE001 — every failure goes to AER
-            err = f"{type(e).__name__}: {e}"
-            fixed = proposer.repair(case, v, err) or aer.repair(v, err, stage)
-            if fixed is None or repairs >= 4:
-                status = {"build": "build_error", "fe": "fe_fail",
-                          "run": "run_error"}[stage]
-                return CandidateLog(v, status, repairs=repairs, error=err[:300])
-            v = fixed
-            repairs += 1
+class Evaluator:
+    """Pure per-candidate evaluation: build → FE → time (eq. 3–4), with
+    AER-driven retries at each stage.  When an ``EvalCache`` is attached,
+    every outcome is content-addressed by the full evaluation spec, so
+    repeated candidates — within a round, across kernels, or across
+    campaign restarts — are served from the cache."""
+
+    def __init__(self, mep: MEP, case: KernelCase, platform_name: str,
+                 aer: AER, proposer: Proposer, cfg: OptConfig,
+                 cache: Optional[EvalCache] = None):
+        self.mep = mep
+        self.case = case
+        self.platform_name = platform_name
+        self.aer = aer
+        self.proposer = proposer
+        self.cfg = cfg
+        self.cache = cache
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def measure_baseline(self, variant: Variant) -> float:
+        """Timing-only measurement (no FE) of an already-trusted variant."""
+        if self.cache is None:
+            return self.mep.measure(variant, r=self.cfg.r,
+                                    k=self.cfg.k).trimmed_mean_s
+
+        def compute() -> EvalRecord:
+            t = self.mep.measure(variant, r=self.cfg.r,
+                                 k=self.cfg.k).trimmed_mean_s
+            return EvalRecord(status="ok", time_s=t,
+                              final_variant=dict(variant))
+
+        rec, hit = self.cache.get_or_compute(self._spec(variant, "measure"),
+                                             compute)
+        self._count(hit)
+        return rec.time_s
+
+    def evaluate(self, variant: Variant) -> CandidateLog:
+        if self.cache is None:
+            return self._evaluate_uncached(variant)
+
+        def compute() -> EvalRecord:
+            cl = self._evaluate_uncached(variant)
+            return EvalRecord(status=cl.status, time_s=cl.time_s,
+                              fe_abs_err=cl.fe_abs_err, repairs=cl.repairs,
+                              error=cl.error, final_variant=dict(cl.variant))
+
+        rec, hit = self.cache.get_or_compute(self._spec(variant, "eval"),
+                                             compute)
+        self._count(hit)
+        return CandidateLog(dict(rec.final_variant), rec.status, rec.time_s,
+                            fe_abs_err=rec.fe_abs_err, repairs=rec.repairs,
+                            error=rec.error, cached=hit)
+
+    # ------------------------------------------------------------------
+    def _spec(self, variant: Variant, kind: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        params: Dict[str, Any] = {"r": cfg.r, "k": cfg.k,
+                                  "seed": self.mep.seed}
+        if kind == "eval":
+            # a full evaluation embeds repair outcomes, so the repair
+            # policy is part of the key (AER-only proposers share it)
+            params.update(fe_input_sets=cfg.fe_input_sets,
+                          fe_scale=cfg.fe_scale or min(self.mep.scale,
+                                                       min(self.case.scales)),
+                          check_pallas=cfg.check_pallas,
+                          repair=getattr(self.proposer, "repair_key", "aer"))
+        return canonical_spec(self.case.name, variant, self.mep.scale,
+                              self.platform_name, kind=kind, **params)
+
+    def _count(self, hit: bool) -> None:
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+
+    def _evaluate_uncached(self, variant: Variant) -> CandidateLog:
+        mep, case, cfg = self.mep, self.case, self.cfg
+        v = dict(variant)
+        repairs = 0
+        while True:
+            stage = "build"
+            try:
+                fe_scale = cfg.fe_scale or min(mep.scale, min(case.scales))
+                stage = "fe"
+                rtol_scale = 200.0 if v.get("compute_dtype") == "bf16" else 1.0
+                r = fe_mod.check(case, v, fe_scale, impl="jnp",
+                                 n_input_sets=cfg.fe_input_sets,
+                                 rtol_scale=rtol_scale)
+                if not r.ok:
+                    raise FloatingPointError(f"FE violation: {r.detail}")
+                if cfg.check_pallas:
+                    rp = fe_mod.check(case, v, fe_scale, impl="pallas",
+                                      n_input_sets=1, rtol_scale=4.0)
+                    if not rp.ok:
+                        raise FloatingPointError(
+                            f"FE(pallas) violation: {rp.detail}")
+                stage = "run"
+                t = mep.measure(v, r=cfg.r, k=cfg.k)
+                return CandidateLog(v, "ok", t.trimmed_mean_s,
+                                    fe_abs_err=r.max_abs_err, repairs=repairs)
+            except Exception as e:  # noqa: BLE001 — every failure goes to AER
+                err = f"{type(e).__name__}: {e}"
+                fixed = self.proposer.repair(case, v, err) \
+                    or self.aer.repair(v, err, stage)
+                if fixed is None or repairs >= 4:
+                    status = {"build": "build_error", "fe": "fe_fail",
+                              "run": "run_error"}[stage]
+                    return CandidateLog(v, status, repairs=repairs,
+                                        error=err[:300])
+                v = fixed
+                repairs += 1
 
 
 def optimize(case: KernelCase, platform: Platform, proposer: Proposer, *,
@@ -127,49 +218,11 @@ def optimize(case: KernelCase, platform: Platform, proposer: Proposer, *,
              constraints: MEPConstraints = MEPConstraints(),
              patterns: Optional[PatternStore] = None,
              seed: int = 0,
-             mep: Optional[MEP] = None) -> OptResult:
-    t_start = time.time()
-    mep = mep or build_mep(case, platform, constraints=constraints, seed=seed)
-    aer = AER(case, mep.scale)
-
-    baseline_v = dict(case.baseline_variant)
-    t_base = mep.measure(baseline_v, r=cfg.r, k=cfg.k).trimmed_mean_s
-    best_v, best_t = baseline_v, t_base
-    res = OptResult(case.name, platform.name, proposer.name,
-                    baseline_v, t_base, best_v, best_t,
-                    mep_log=list(mep.log))
-
-    history: List[Dict[str, Any]] = []
-    errors: List[str] = []
-    for d in range(cfg.d_rounds):
-        state = RoundState(
-            round=d, baseline_variant=best_v, baseline_time_s=best_t,
-            feedback=platform.profile_feedback(case, best_v, mep.scale),
-            history=history, errors=errors)
-        cands = proposer.propose(case, state, cfg.n_candidates)
-        rl = RoundLog(round=d, baseline_time_s=best_t)
-        for v in cands:
-            cl = _evaluate(mep, case, v, aer, proposer, cfg)
-            rl.candidates.append(cl)
-            history.append({"variant": cl.variant, "time_s": cl.time_s,
-                            "status": cl.status})
-            if cl.status != "ok":
-                errors.append(cl.error)
-        feasible = [c for c in rl.candidates if c.status == "ok"]
-        if feasible:
-            winner = min(feasible, key=lambda c: c.time_s)   # eq. 5 argmin
-            rl.best_time_s = winner.time_s
-            if winner.time_s < best_t:
-                gain = best_t / winner.time_s
-                rl.improved = gain > 1.0 + cfg.improve_eps
-                best_v, best_t = winner.variant, winner.time_s
-        res.rounds.append(rl)
-        if not rl.improved and d > 0:
-            break   # improvement below threshold
-
-    res.best_variant, res.best_time_s = best_v, best_t
-    res.aer_records = len(aer.records)
-    res.wall_s = time.time() - t_start
-    if patterns is not None:
-        patterns.record(case, platform.name, baseline_v, best_v, res.speedup)
-    return res
+             mep: Optional[MEP] = None,
+             cache: Optional[EvalCache] = None) -> OptResult:
+    """Serial single-kernel entry point: a one-case campaign."""
+    from repro.core.campaign import Campaign, CaseJob
+    camp = Campaign(platform, patterns=patterns, cache=cache, max_workers=1)
+    job = CaseJob(case, proposer, cfg=cfg, constraints=constraints,
+                  seed=seed, mep=mep)
+    return camp.run([job])[0]

@@ -54,12 +54,26 @@ class PatternStore:
     # ------------------------------------------------------------------
     def record(self, case: KernelCase, platform: str, baseline: Variant,
                best: Variant, gain: float) -> Optional[Pattern]:
-        """Summarize the winning strategy as a delta vs the baseline."""
+        """Summarize the winning strategy as a delta vs the baseline.
+
+        Safe under concurrent campaign workers: the read-modify-write is
+        atomic, and an identical (family, platform, delta) merges into
+        the existing pattern (keeping the best observed gain) instead of
+        accumulating duplicates."""
         delta = {k: v for k, v in best.items() if baseline.get(k) != v}
         if not delta or gain <= 1.02:
             return None
-        p = Pattern(case.family, platform, delta, gain, case.name)
         with self._lock:
+            for q in self.patterns:
+                if (q.family == case.family and q.platform == platform
+                        and q.delta == delta):
+                    if gain > q.gain:
+                        q.gain = gain
+                        q.source_kernel = case.name
+                        q.ts = time.time()
+                        self._flush()
+                    return q
+            p = Pattern(case.family, platform, delta, gain, case.name)
             self.patterns.append(p)
             self._flush()
         return p
@@ -79,7 +93,9 @@ class PatternStore:
                 s *= 0.5       # avoid echoing the kernel's own history
             return s
 
-        ranked = sorted(self.patterns, key=score, reverse=True)
+        with self._lock:
+            snapshot = list(self.patterns)
+        ranked = sorted(snapshot, key=score, reverse=True)
         seen, out = set(), []
         for p in ranked:
             key = tuple(sorted(p.delta.items()))

@@ -15,7 +15,10 @@ Two platforms mirror the paper's NVIDIA/DCU pair (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -63,8 +66,44 @@ def wallclock(fn: Callable, inputs, *, r: int, k: int,
 
 
 # --------------------------------------------------------------------------
+class _LRUCache:
+    """Thread-safe bounded LRU keyed by variant; recently-timed entries
+    stay, the least-recently-timed are evicted."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = max(1, maxsize)
+        self._od: "OrderedDict[Any, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        with self._lock:
+            if key not in self._od:
+                return None
+            self._od.move_to_end(key)
+            return self._od[key]
+
+    def put(self, key, val) -> None:
+        with self._lock:
+            self._od[key] = val
+            self._od.move_to_end(key)
+            while len(self._od) > self.maxsize:
+                self._od.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._od)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._od
+
+
 class Platform:
     name: str = "abstract"
+    # True → timing is analytic/deterministic, so a campaign may evaluate
+    # this platform's candidates from concurrent workers.  Measured
+    # platforms must stay False: parallel wall-clocking corrupts eq. 3.
+    concurrency_safe: bool = False
 
     def time_variant(self, case: KernelCase, variant: Variant, scale: int,
                      inputs, *, r: int, k: int) -> TimingResult:
@@ -85,18 +124,23 @@ class Platform:
 
 class CPUPlatform(Platform):
     name = "cpu"
+    concurrency_safe = False     # measured wall-clock
 
-    def __init__(self):
-        self._cache: Dict[Any, Callable] = {}
+    def __init__(self, max_cache: Optional[int] = None):
+        if max_cache is None:
+            max_cache = int(os.environ.get("REPRO_CPU_CACHE_MAX", "64"))
+        self._cache = _LRUCache(max_cache)
 
     def _compiled(self, case: KernelCase, variant: Variant):
         # builds jit their own stages: an unfused variant is a chain of
         # separately-jitted passes (the CUDA multi-kernel-launch analogue),
         # so the platform must NOT wrap another jit around it.
         key = (case.name, tuple(sorted(variant.items())))
-        if key not in self._cache:
-            self._cache[key] = case.build(variant, impl="jnp")
-        return self._cache[key]
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = case.build(variant, impl="jnp")
+            self._cache.put(key, fn)
+        return fn
 
     def time_variant(self, case, variant, scale, inputs, *, r, k):
         fn = self._compiled(case, variant)
@@ -112,6 +156,7 @@ class TPUModelPlatform(Platform):
     real profile would give the LLM.
     """
     name = "tpu-v5e-model"
+    concurrency_safe = True      # analytic, no shared timing state
     LAUNCH_OVERHEAD_S = 2e-6
 
     def __init__(self, peak_flops: float = hw.PEAK_FLOPS_BF16,

@@ -45,6 +45,11 @@ class RoundState:
 
 class Proposer:
     name = "abstract"
+    # identity of the repair policy evaluate() will apply — part of the
+    # EvalCache key, so proposers sharing the default AER-only repair
+    # (heuristic, direct) dedup against each other, while a proposer
+    # with its own repair (LLM) gets isolated cache entries
+    repair_key = "aer"
 
     def propose(self, case: KernelCase, state: RoundState, n: int
                 ) -> List[Variant]:
@@ -179,6 +184,7 @@ class LLMProposer(Proposer):
     Requires REPRO_LLM_ENDPOINT (OpenAI-compatible /chat/completions) and
     optionally REPRO_LLM_MODEL / REPRO_LLM_API_KEY."""
     name = "llm"
+    repair_key = "llm"           # model-dependent repairs: isolate in cache
 
     PROMPT = """You are optimizing a TPU kernel. Case: {name} (family
 {family}). Current variant: {variant}. Variant space: {space}.

@@ -121,7 +121,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=donate)
-    with jax.set_mesh(mesh):
+    # jax.set_mesh is the modern spelling; older jax enters the Mesh itself
+    with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -161,6 +162,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
               f"mfu_bound={roof.model_flops_utilization:.3f}")
         print("  memory_analysis:", mem)
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+            ca = ca[0] if ca else {}
         print("  cost_analysis: flops=%.3e bytes=%.3e" %
               (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
         print("  collectives:", roof.collectives.bytes_by_kind)

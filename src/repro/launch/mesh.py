@@ -11,16 +11,25 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:          # older jax: meshes are implicitly Auto-typed
+    AxisType = None
 
 from repro.sharding.ctx import ShardCtx
+
+
+def _axis_types_kw(n: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_ctx(mesh, preset: str = "default", **kw) -> ShardCtx:
@@ -57,7 +66,7 @@ def make_smoke_mesh(n: int = 0):
     n = n or len(jax.devices())
     model = 2 if n % 2 == 0 and n > 1 else 1
     return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **_axis_types_kw(2))
 
 
 # TPU v5e hardware model (roofline constants)

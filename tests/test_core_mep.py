@@ -1,72 +1,23 @@
-"""MEP framework behaviour: eq. 1–5 semantics, AER, PPI, integration, and
-hypothesis property tests on the invariants."""
+"""MEP framework behaviour: eq. 1–5 semantics, AER, PPI, and integration.
+
+Hypothesis property tests on the invariants live in
+test_core_properties.py (optional dev dependency, see
+requirements-dev.txt)."""
 import math
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (AER, CPUPlatform, DirectProposer, HeuristicProposer,
                         MEPConstraints, OptConfig, PatternStore,
-                        TPUModelPlatform, build_mep, cases, emit_script,
-                        fe_check, get_case, optimize, trimmed_mean)
-from repro.core.datagen import DataBudget, generate
-from repro.core.kernelcase import ArraySpec
+                        TPUModelPlatform, build_mep, emit_script, get_case,
+                        optimize)
 from repro.core import integrate
 from repro.kernels import ops
 
 FAST = MEPConstraints(t_max_s=2.0, r=5, k=1)
 FAST_CFG = OptConfig(d_rounds=2, n_candidates=2, r=5, k=1)
-
-
-# -------------------------------------------------------- eq.3 trimmed ----
-@given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
-                          allow_nan=False), min_size=7, max_size=50),
-       st.integers(min_value=0, max_value=3))
-@settings(max_examples=100, deadline=None)
-def test_trimmed_mean_properties(times, k):
-    if len(times) <= 2 * k:
-        with pytest.raises(ValueError):
-            trimmed_mean(times, k)
-        return
-    tm = trimmed_mean(times, k)
-    s = sorted(times)
-    # bounded by the kept extremes
-    assert s[k] - 1e-9 <= tm <= s[len(s) - k - 1] + 1e-9
-    # permutation invariant
-    assert math.isclose(tm, trimmed_mean(list(reversed(times)), k),
-                        rel_tol=1e-9)
-    # outlier robustness: inflating the max by 1000× can't change k>0 trim
-    if k > 0:
-        inflated = s[:-1] + [s[-1] * 1000]
-        assert math.isclose(tm, trimmed_mean(inflated, k), rel_tol=1e-9)
-
-
-# ------------------------------------------------------ datagen / eq.2 ----
-@given(st.integers(min_value=1, max_value=64),
-       st.integers(min_value=1, max_value=64),
-       st.sampled_from(["normal", "uniform", "positive", "sorted",
-                        "symmetric", "spd"]))
-@settings(max_examples=50, deadline=None)
-def test_datagen_properties(n, m, kind):
-    spec = ArraySpec((n, m) if kind not in ("symmetric", "spd") else (n, n),
-                     "float32", kind)
-    a, = generate([spec], seed=7)
-    b, = generate([spec], seed=7)
-    np.testing.assert_array_equal(a, b)          # deterministic
-    assert a.nbytes == spec.nbytes
-    if kind == "sorted":
-        assert np.all(np.diff(a, axis=-1) >= 0)
-    if kind == "symmetric":
-        np.testing.assert_allclose(a, a.T, rtol=1e-6)
-    if kind == "spd":
-        ev = np.linalg.eigvalsh(a.astype(np.float64))
-        assert ev.min() > 0
-    if kind == "positive":
-        assert a.min() > 0
 
 
 def test_data_budget_constrains_mep_scale():
@@ -229,24 +180,6 @@ def test_emit_script_runs(tmp_path):
                          text=True, env=env, timeout=300)
     assert out.returncode == 0, out.stderr
     assert "FE=True" in out.stdout
-
-
-# ----------------------------------------------- variant-space property ---
-@given(st.data())
-@settings(max_examples=15, deadline=None)
-def test_random_variants_preserve_fe(data):
-    """Any point in a case's variant space is functionally equivalent
-    (the optimizer can never trade correctness for speed)."""
-    name = data.draw(st.sampled_from(["atax", "gesummv", "reduction",
-                                      "vectoradd", "dwthaar1d",
-                                      "fastwalshtransform"]))
-    case = get_case(name)
-    variant = {k: data.draw(st.sampled_from(vs))
-               for k, vs in case.variant_space.items()}
-    rtol = 200.0 if variant.get("compute_dtype") == "bf16" else 1.0
-    r = fe_check(case, variant, min(case.scales), n_input_sets=1,
-                 rtol_scale=rtol)
-    assert r.ok, f"{name} {variant}: {r.detail}"
 
 
 # ------------------------------------------------------------ extraction --
