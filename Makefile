@@ -1,8 +1,13 @@
-.PHONY: verify bench bench-full
+.PHONY: verify test-fast bench bench-full
 
 # Tier-1 tests (ROADMAP.md)
 verify:
 	./scripts/verify.sh
+
+# Tier-1 minus the hypothesis property suite (quick local iteration)
+test-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		--ignore=tests/test_core_properties.py
 
 # Campaign-engine benchmark tables (CI-scale parameters)
 bench:

@@ -55,7 +55,7 @@ def main() -> None:
     from repro.core import EvalCache, PatternStore, ResultsDB
     from benchmarks.common import BenchContext
     from benchmarks import (table1_polybench_a, table2_polybench_b,
-                            table3_appsdk, table4_hotspots)
+                            table3_appsdk, table4_hotspots, table5_serve)
 
     if args.out:
         res_dir = os.path.dirname(args.out) or "."
@@ -77,6 +77,7 @@ def main() -> None:
         "2": ("table2_polybench_b", table2_polybench_b.main),
         "3": ("table3_appsdk", table3_appsdk.main),
         "4": ("table4_hotspots", table4_hotspots.main),
+        "5": ("table5_serve_autotune", table5_serve.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

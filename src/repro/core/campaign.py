@@ -97,12 +97,21 @@ class Campaign:
         self._meps: Dict[Tuple, MEP] = {}
 
     # ------------------------------------------------------------------
-    def run(self, jobs: List[CaseJob]) -> List[OptResult]:
+    def run(self, jobs: List[CaseJob], *,
+            stop: Optional[threading.Event] = None) -> List[OptResult]:
         """Run all jobs; the result list matches the job order.
 
         One failing job does not abort the others: every job runs to
         completion, the journal gets its campaign_end record either way,
-        and only then is the first failure re-raised."""
+        and only then is the first failure re-raised.
+
+        ``stop`` makes the campaign interruptible: a background owner
+        (the serve-layer autotuner) sets the event and every job winds
+        down at its next round boundary, returning a partial-but-valid
+        OptResult (``stop_reason="stop requested"``).  Because every
+        evaluation went through the shared EvalCache, re-running the
+        same jobs later resumes where the stopped campaign left off —
+        completed rounds replay as cache hits."""
         campaign_id = f"c{os.getpid():x}-{int(time.time() * 1e3):x}"
         t0 = time.time()
         if self.db:
@@ -113,7 +122,7 @@ class Campaign:
 
         def guarded(job: CaseJob):
             try:
-                return self._optimize_case(job, campaign_id)
+                return self._optimize_case(job, campaign_id, stop_event=stop)
             except Exception as e:  # noqa: BLE001 — isolate job failures
                 return e
 
@@ -144,7 +153,10 @@ class Campaign:
 
     # ------------------------------------------------------------------
     def _get_mep(self, job: CaseJob) -> MEP:
-        key = (job.case.name, self.platform.name, job.seed, job.constraints)
+        # a pre-built MEP may be pinned to a non-default (e.g. observed
+        # traffic) scale, so its scale is part of the dedup identity
+        key = (job.case.name, self.platform.name, job.seed, job.constraints,
+               job.mep.scale if job.mep else None)
         with self._mep_lock:
             lk = self._mep_locks.setdefault(key, threading.Lock())
         with lk:
@@ -154,7 +166,9 @@ class Campaign:
                     seed=job.seed)
             return self._meps[key]
 
-    def _optimize_case(self, job: CaseJob, campaign_id: str) -> OptResult:
+    def _optimize_case(self, job: CaseJob, campaign_id: str, *,
+                       stop_event: Optional[threading.Event] = None
+                       ) -> OptResult:
         """The paper's §3.2 search loop for one kernel (serial per case;
         concurrency happens across cases)."""
         t_start = time.time()
@@ -174,6 +188,10 @@ class Campaign:
         history: List[Dict[str, Any]] = []
         errors: List[str] = []
         for d in range(cfg.d_rounds):
+            if stop_event is not None and stop_event.is_set():
+                res.stop_reason = "stop requested"
+                res.mep_log.append(f"round {d}: stopped (stop requested)")
+                break
             state = RoundState(
                 round=d, baseline_variant=best_v, baseline_time_s=best_t,
                 feedback=self.platform.profile_feedback(case, best_v,

@@ -6,16 +6,30 @@ code asks the registry for an implementation at each hotspot site, so
 installing the optimized variant requires no model edits and — crucially —
 no re-derivation of the full training step per candidate.  Only the final
 winner triggers one full build.
+
+Two install APIs live here:
+
+* ``install`` / ``uninstall`` — the offline benchmark path: push the
+  variant onto the site's generation stack, measure, pop.  Nested
+  install/uninstall pairs compose (each uninstall restores exactly what
+  its install replaced).
+* ``guarded_install`` — the online serving path: FE-check the variant at
+  the *observed traffic scale* before touching the registry, install a
+  new generation, then probe the integrated step and automatically roll
+  back to the prior generation if the step regresses or its outputs
+  diverge.  This is what lets a background autotune campaign hot-swap
+  winners into a live server without trusting them blindly.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.core import fe as fe_mod
 from repro.core.kernelcase import KernelCase, Variant
 from repro.core.profiler import trimmed_mean
 from repro.kernels import ops
@@ -35,16 +49,21 @@ class IntegrationResult:
                 if self.optimized_time_s else 0.0)
 
 
-def install(case: KernelCase, variant: Variant, *, impl: str = "jnp") -> None:
-    """Install the optimized variant at its app hotspot site."""
+def install(case: KernelCase, variant: Variant, *, impl: str = "jnp",
+            **meta: Any) -> int:
+    """Install the optimized variant at its app hotspot site; returns the
+    registry generation (the previous impl stays underneath)."""
     if not case.app_site:
         raise ValueError(f"{case.name} has no app_site to integrate into")
-    ops.set_impl(case.app_site, case.build(variant, impl=impl))
+    return ops.install(case.app_site, case.build(variant, impl=impl),
+                       case=case.name, variant=dict(variant), **meta)
 
 
 def uninstall(case: KernelCase) -> None:
+    """Pop this case's site back to whatever was active before the last
+    install (not necessarily empty — nested installs compose)."""
     if case.app_site:
-        ops.set_impl(case.app_site, None)
+        ops.rollback(case.app_site)
 
 
 def measure_app(step_fn: Callable, args, *, r: int = 10, k: int = 1,
@@ -86,10 +105,165 @@ def integrated_speedup(case: KernelCase, variant: Variant,
     finally:
         uninstall(case)
 
-    errs = [float(np.max(np.abs(np.asarray(a, np.float64)
-                                - np.asarray(b, np.float64))))
-            for a, b in zip(jax.tree.leaves(base_out), jax.tree.leaves(opt_out))
-            if hasattr(a, "shape")]
-    max_err = max(errs) if errs else 0.0
+    max_err = _max_abs_err(base_out, opt_out)
     return IntegrationResult(case.app_site, t_base, t_opt,
                              fe_ok=max_err < 5e-2, max_abs_err=max_err)
+
+
+# --------------------------------------------------------------------------
+# Guarded online install (serve-layer autotuning)
+# --------------------------------------------------------------------------
+@dataclass
+class GuardedInstall:
+    """Outcome of one guarded hot-swap attempt."""
+    site: str
+    case_name: str
+    variant: Variant
+    scale: int
+    installed: bool = False       # the registry was touched
+    rolled_back: bool = False     # ... and then restored
+    reason: str = ""
+    fe_ok: bool = False
+    fe_abs_err: float = 0.0
+    probe_baseline_s: float = 0.0
+    probe_installed_s: float = 0.0
+    probe_max_abs_err: float = 0.0
+    generation_before: int = 0
+    generation: int = 0           # active generation after the call
+
+    @property
+    def active(self) -> bool:
+        """True iff the variant is live in the registry right now."""
+        return self.installed and not self.rolled_back
+
+    @property
+    def probe_speedup(self) -> float:
+        return (self.probe_baseline_s / self.probe_installed_s
+                if self.probe_installed_s else 0.0)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "site": self.site, "case": self.case_name,
+            "variant": dict(self.variant), "scale": self.scale,
+            "installed": self.installed, "rolled_back": self.rolled_back,
+            "active": self.active, "reason": self.reason,
+            "fe_ok": self.fe_ok, "fe_abs_err": self.fe_abs_err,
+            "probe_baseline_s": self.probe_baseline_s,
+            "probe_installed_s": self.probe_installed_s,
+            "probe_speedup": self.probe_speedup,
+            "probe_max_abs_err": self.probe_max_abs_err,
+            "generation_before": self.generation_before,
+            "generation": self.generation,
+        }
+
+
+def _max_abs_err(a, b) -> float:
+    errs = [float(np.max(np.abs(np.asarray(x, np.float64)
+                                - np.asarray(y, np.float64))))
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+            if hasattr(x, "shape")]
+    return max(errs) if errs else 0.0
+
+
+def _probe_stats(probe: Callable[[], Any], r: int, k: int
+                 ) -> Tuple[float, Any]:
+    """Trimmed-mean wall-clock of ``probe`` plus its (last) outputs; one
+    warmup call absorbs trace/compile."""
+    out = probe()
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(max(r, 2 * k + 1)):
+        t0 = time.perf_counter()
+        out = probe()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return trimmed_mean(times, k), out
+
+
+def guarded_install(case: KernelCase, variant: Variant, *, scale: int,
+                    impl: str = "jnp",
+                    probe: Optional[Callable[[], Any]] = None,
+                    max_regression: float = 0.25, atol: float = 5e-2,
+                    r: int = 3, k: int = 0, fe_input_sets: int = 2,
+                    seed: int = 0, **meta: Any) -> GuardedInstall:
+    """Hot-swap ``variant`` into its app site with pre- and post-install
+    guards; never raises on a bad candidate — the outcome says what
+    happened and the registry is left in a safe state.
+
+    Guard 1 (pre-install): functional equivalence against the case oracle
+    at ``scale`` — the *observed traffic* scale, not the MEP's benchmark
+    scale.  A failing candidate never touches the registry.
+
+    Guard 2 (post-install): if a ``probe`` is given (any callable running
+    the integrated step through the registry — it must consult the active
+    impl per call, e.g. via ``ops.get_impl`` or by re-tracing), it is
+    timed before and after the install.  The install is rolled back to
+    the prior generation when the probe's outputs diverge beyond ``atol``,
+    go non-finite, the step slows down by more than ``max_regression``
+    (fractional, 0.25 = 25%), or the probe itself raises.
+    """
+    if not case.app_site:
+        raise ValueError(f"{case.name} has no app_site to integrate into")
+    site = case.app_site
+    res = GuardedInstall(site, case.name, dict(variant), int(scale),
+                         generation_before=ops.generation(site),
+                         generation=ops.generation(site))
+
+    # -- guard 1: FE at the observed traffic scale -------------------------
+    try:
+        fr = fe_mod.check(case, variant, scale, impl=impl,
+                          n_input_sets=fe_input_sets, seed=seed)
+    except Exception as e:  # noqa: BLE001 — a broken build must not leak
+        res.reason = f"fe_error: {type(e).__name__}: {e}"[:300]
+        return res
+    res.fe_ok, res.fe_abs_err = fr.ok, fr.max_abs_err
+    if not fr.ok:
+        res.reason = f"fe_fail: {fr.detail}"[:300]
+        return res
+
+    # -- baseline probe under the incumbent impl ---------------------------
+    base_out = None
+    if probe is not None:
+        try:
+            res.probe_baseline_s, base_out = _probe_stats(probe, r, k)
+        except Exception as e:  # noqa: BLE001
+            res.reason = f"probe_error(baseline): {type(e).__name__}: {e}"[:300]
+            return res
+
+    # -- install a new generation -----------------------------------------
+    res.generation = ops.install(site, case.build(variant, impl=impl),
+                                 case=case.name, variant=dict(variant),
+                                 scale=int(scale), **meta)
+    res.installed = True
+
+    # -- guard 2: integrated step must neither diverge nor regress --------
+    if probe is not None:
+        try:
+            res.probe_installed_s, new_out = _probe_stats(probe, r, k)
+        except Exception as e:  # noqa: BLE001
+            res.generation = ops.rollback(site, res.generation_before)
+            res.rolled_back = True
+            res.reason = f"probe_error: {type(e).__name__}: {e}"[:300]
+            return res
+        res.probe_max_abs_err = _max_abs_err(base_out, new_out)
+        finite = all(np.all(np.isfinite(np.asarray(x, np.float64)))
+                     for x in jax.tree.leaves(new_out)
+                     if hasattr(x, "shape"))
+        if res.probe_max_abs_err > atol or not finite:
+            res.generation = ops.rollback(site, res.generation_before)
+            res.rolled_back = True
+            res.reason = (f"diverged: max_abs_err="
+                          f"{res.probe_max_abs_err:.3e} > atol={atol:.1e}"
+                          if finite else "diverged: non-finite outputs")
+            return res
+        if res.probe_installed_s > res.probe_baseline_s * (1.0
+                                                          + max_regression):
+            res.generation = ops.rollback(site, res.generation_before)
+            res.rolled_back = True
+            res.reason = (f"regressed: {res.probe_installed_s * 1e6:.1f}us vs "
+                          f"{res.probe_baseline_s * 1e6:.1f}us baseline "
+                          f"(> {1.0 + max_regression:.2f}x)")
+            return res
+
+    res.reason = "installed"
+    return res

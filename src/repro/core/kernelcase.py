@@ -19,6 +19,8 @@ Inheritance store.
 """
 from __future__ import annotations
 
+import hashlib
+import inspect
 import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -26,6 +28,19 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 Variant = Dict[str, Any]
+
+
+def _fn_fingerprint(fn: Callable) -> str:
+    """Stable fingerprint of a function's implementation: its source when
+    available, else its compiled code object (dynamically-generated
+    functions).  Changing the function body changes the fingerprint."""
+    try:
+        return inspect.getsource(fn)
+    except (OSError, TypeError):
+        code = getattr(fn, "__code__", None)
+        if code is None:
+            return repr(fn)
+        return repr((code.co_code, code.co_consts, code.co_names))
 
 
 @dataclass(frozen=True)
@@ -65,6 +80,22 @@ class KernelCase:
     # hotspot site in the full application ('' = standalone benchmark only)
     app_site: str = ""
     notes: str = ""
+    # init=False: dataclasses.replace(case, build=...) must re-derive the
+    # digest for the new build, never inherit the stale cached one
+    _digest: Optional[str] = field(default=None, init=False, repr=False,
+                                   compare=False)
+
+    def source_digest(self) -> str:
+        """Digest of the case's kernel-construction code (``build`` and the
+        ``ref`` oracle).  Stamped into every EvalCache key so editing a
+        case's kernel source invalidates its persisted timings instead of
+        silently replaying stale measurements (ROADMAP: eval-cache
+        invalidation)."""
+        if self._digest is None:
+            blob = "\0".join((_fn_fingerprint(self.build),
+                              _fn_fingerprint(self.ref)))
+            self._digest = hashlib.sha256(blob.encode()).hexdigest()[:12]
+        return self._digest
 
     def data_bytes(self, scale: int) -> int:
         return sum(s.nbytes for s in self.input_specs(scale))

@@ -64,39 +64,54 @@ class MEP:
 
 def build_mep(case: KernelCase, platform: Platform, *,
               constraints: MEPConstraints = MEPConstraints(),
-              seed: int = 0) -> MEP:
+              seed: int = 0, scale: Optional[int] = None) -> MEP:
     """Auto-size the MEP: walk scales from large to small until both the
-    data budget (eq. 2) and the time constraints (eq. 1) admit it."""
+    data budget (eq. 2) and the time constraints (eq. 1) admit it.
+
+    ``scale`` pins the MEP to one problem size — the serve-layer
+    autotuner uses this to optimize at the *observed traffic* scale
+    instead of the benchmark grid.  A pinned scale that misses the
+    budget is still used (via the fallback path) since it is what the
+    workload actually runs."""
     budget = DataBudget(constraints.s_max_bytes)
     log: List[str] = []
     chosen = None
-    for scale in sorted(case.scales, reverse=True):
-        specs = case.input_specs(scale)
+    time_rejected = None      # (sc, inputs, t) reusable by the fallback
+    candidate_scales = ([int(scale)] if scale is not None
+                        else sorted(case.scales, reverse=True))
+    for sc in candidate_scales:
+        specs = case.input_specs(sc)
         if not budget.admits(specs):
-            log.append(f"scale {scale}: rejected, S_data="
+            log.append(f"scale {sc}: rejected, S_data="
                        f"{datagen.data_bytes(specs)/2**20:.1f} MiB > S_max")
             continue
         inputs = datagen.generate(specs, seed)
         # probe the baseline once (compile excluded by wallclock warmup)
-        t = platform.time_variant(case, case.baseline_variant, scale,
+        t = platform.time_variant(case, case.baseline_variant, sc,
                                   inputs, r=3, k=0).trimmed_mean_s
         overall = t * constraints.r * 1.5          # R reps + FE overhead
         if overall > constraints.t_max_s:
-            log.append(f"scale {scale}: rejected, projected T_overall="
+            log.append(f"scale {sc}: rejected, projected T_overall="
                        f"{overall:.2f}s > T_max={constraints.t_max_s}s")
+            time_rejected = (sc, inputs, t)
             continue
-        chosen = (scale, inputs, t)
-        log.append(f"scale {scale}: accepted, T_ker={t*1e3:.3f}ms, "
+        chosen = (sc, inputs, t)
+        log.append(f"scale {sc}: accepted, T_ker={t*1e3:.3f}ms, "
                    f"S_data={sum(a.nbytes for a in inputs)/2**20:.1f} MiB")
         break
     if chosen is None:
-        # smallest scale as last resort (T_min may force more reps)
-        scale = min(case.scales)
-        inputs = datagen.generate(case.input_specs(scale), seed)
-        t = platform.time_variant(case, case.baseline_variant, scale,
-                                  inputs, r=3, k=0).trimmed_mean_s
-        chosen = (scale, inputs, t)
-        log.append(f"fallback to smallest scale {scale}")
+        # last resort: the pinned scale (it is the observed workload), else
+        # the smallest benchmark scale (T_min may force more reps)
+        sc = int(scale) if scale is not None else min(case.scales)
+        if time_rejected is not None and time_rejected[0] == sc:
+            chosen = time_rejected        # already generated and probed
+        else:
+            inputs = datagen.generate(case.input_specs(sc), seed)
+            t = platform.time_variant(case, case.baseline_variant, sc,
+                                      inputs, r=3, k=0).trimmed_mean_s
+            chosen = (sc, inputs, t)
+        log.append(f"fallback to {'pinned' if scale is not None else 'smallest'}"
+                   f" scale {sc}")
     scale, inputs, t = chosen
     # T_ker ≥ T_min: repeat the kernel inside one measurement if too fast
     # (handled by rep scaling of R; the per-measurement loop count is 1 —

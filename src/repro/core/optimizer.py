@@ -156,8 +156,12 @@ class Evaluator:
     # ------------------------------------------------------------------
     def _spec(self, variant: Variant, kind: str) -> Dict[str, Any]:
         cfg = self.cfg
+        # the kernel-source digest makes editing a case's build/ref code
+        # invalidate its persisted cache entries (ROADMAP: eval-cache
+        # invalidation) instead of replaying timings of the old kernel
         params: Dict[str, Any] = {"r": cfg.r, "k": cfg.k,
-                                  "seed": self.mep.seed}
+                                  "seed": self.mep.seed,
+                                  "src": self.case.source_digest()}
         if kind == "eval":
             # a full evaluation embeds repair outcomes, so the repair
             # policy is part of the key (AER-only proposers share it)

@@ -1,10 +1,24 @@
 """Kernel-variant registry: the reintegration point of the MEP framework.
 
 Model code asks ``get_impl(site)`` at trace time; the MEP optimizer (or a
-config flag) installs an optimized variant with ``set_impl`` /
-``use_impl``.  This is how an MEP-optimized kernel is swapped back into the
-full application ("Integrated Speedup" in the paper) without editing model
-code or re-deriving the training step.
+config flag) installs an optimized variant with ``install`` / ``set_impl``
+/ ``use_impl``.  This is how an MEP-optimized kernel is swapped back into
+the full application ("Integrated Speedup" in the paper) without editing
+model code or re-deriving the training step.
+
+The registry is **versioned**: every mutation mints a monotonically
+increasing *generation*, and each site keeps a stack of installed
+implementations so a bad install can be rolled back to exactly the state
+it replaced (``core.integrate.guarded_install`` builds on this).  A
+global ``registry_epoch`` counter lets long-lived consumers — the
+``BatchedServer`` keeps jit-compiled step functions that bake the active
+impl in at trace time — detect that *any* site changed and re-trace at a
+convenient boundary (a "swap epoch") instead of polling per call.
+
+A module-level ``telemetry`` object collects traffic-weighted scale
+statistics per site (which scales actually serve tokens), feeding the
+online autotuner (``serve.autotune``) the workload it should optimize
+for, rather than a fixed benchmark scale.
 
 Sites used by the models:
   attention   (q, k, v, *, causal, softcap) -> out
@@ -15,39 +29,197 @@ Sites used by the models:
 from __future__ import annotations
 
 import contextlib
+import itertools
 import threading
-from typing import Any, Callable, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 _lock = threading.Lock()
-_ACTIVE: Dict[str, Callable] = {}
+_STACKS: Dict[str, List["ImplEntry"]] = {}
+_gen_counter = itertools.count(1)
+_epoch = 0
 
 
-def set_impl(site: str, fn: Optional[Callable]) -> None:
+@dataclass(frozen=True)
+class ImplEntry:
+    """One installed implementation: the callable plus its provenance."""
+    fn: Callable
+    generation: int
+    meta: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def info(self) -> Dict[str, Any]:
+        return dict(self.meta)
+
+
+def _bump_epoch() -> None:
+    # caller holds _lock
+    global _epoch
+    _epoch += 1
+
+
+def registry_epoch() -> int:
+    """Monotonic counter bumped on every registry mutation (any site).
+    Consumers that bake impls into traced/jitted code compare this against
+    the epoch they traced under to know when to re-trace."""
+    return _epoch
+
+
+def install(site: str, fn: Callable, **meta: Any) -> int:
+    """Push ``fn`` as the active impl for ``site``; returns its generation.
+    The previous impl stays underneath for ``rollback``."""
     with _lock:
-        if fn is None:
-            _ACTIVE.pop(site, None)
+        gen = next(_gen_counter)
+        _STACKS.setdefault(site, []).append(
+            ImplEntry(fn, gen, tuple(sorted(meta.items()))))
+        _bump_epoch()
+        return gen
+
+
+def rollback(site: str, to_generation: Optional[int] = None) -> int:
+    """Pop installs from ``site``'s stack; returns the now-active
+    generation (0 = empty).  Without ``to_generation`` pops one entry;
+    with it, pops until the active generation is ≤ ``to_generation`` —
+    i.e. restores the state as of that generation."""
+    with _lock:
+        stack = _STACKS.get(site, [])
+        if to_generation is None:
+            if stack:
+                stack.pop()
         else:
-            _ACTIVE[site] = fn
+            while stack and stack[-1].generation > to_generation:
+                stack.pop()
+        if not stack:
+            _STACKS.pop(site, None)
+        _bump_epoch()
+        return stack[-1].generation if stack else 0
+
+
+def generation(site: str) -> int:
+    """Generation of the active impl at ``site`` (0 = nothing installed)."""
+    with _lock:
+        stack = _STACKS.get(site)
+        return stack[-1].generation if stack else 0
+
+
+def history(site: str) -> List[ImplEntry]:
+    """The install stack for ``site``, oldest first (last = active)."""
+    with _lock:
+        return list(_STACKS.get(site, ()))
+
+
+def active_entry(site: str) -> Optional[ImplEntry]:
+    with _lock:
+        stack = _STACKS.get(site)
+        return stack[-1] if stack else None
 
 
 def get_impl(site: str) -> Optional[Callable]:
-    return _ACTIVE.get(site)
+    with _lock:
+        stack = _STACKS.get(site)
+        return stack[-1].fn if stack else None
+
+
+def set_impl(site: str, fn: Optional[Callable]) -> None:
+    """Legacy flat API: replace the site's whole stack with ``fn`` (or
+    clear it with None).  Still mints a generation / bumps the epoch."""
+    with _lock:
+        if fn is None:
+            _STACKS.pop(site, None)
+        else:
+            _STACKS[site] = [ImplEntry(fn, next(_gen_counter))]
+        _bump_epoch()
 
 
 def clear_all() -> None:
     with _lock:
-        _ACTIVE.clear()
+        _STACKS.clear()
+        _bump_epoch()
 
 
 def active_sites() -> Dict[str, Callable]:
-    return dict(_ACTIVE)
+    with _lock:
+        return {site: stack[-1].fn for site, stack in _STACKS.items()
+                if stack}
 
 
 @contextlib.contextmanager
 def use_impl(site: str, fn: Callable):
-    prev = _ACTIVE.get(site)
-    set_impl(site, fn)
+    """Scoped install: on exit the site is restored to the generation it
+    had on entry (anything pushed on top inside the scope is popped too,
+    so nesting composes)."""
+    gen_before = generation(site)
+    install(site, fn)
     try:
         yield
     finally:
-        set_impl(site, prev)
+        rollback(site, gen_before)
+
+
+# --------------------------------------------------------------------------
+# Per-site traffic telemetry
+# --------------------------------------------------------------------------
+class Telemetry:
+    """Thread-safe traffic-weighted scale/shape statistics per site.
+
+    The serving layer calls ``observe`` on its hotspot paths (prefill:
+    one event per admitted prompt, weight = prompt tokens; decode: one
+    event per generated token, scale = context length).  The autotuner
+    reads ``hot_sites`` / ``weighted_scale`` to decide *what* to optimize
+    and *at which scale* — the observed workload, not a benchmark grid.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._sites: Dict[str, Dict[str, Any]] = {}
+
+    def observe(self, site: str, *, scale: int, tokens: int = 1,
+                kind: str = "decode") -> None:
+        with self._lock:
+            st = self._sites.setdefault(
+                site, {"calls": 0, "tokens": 0, "kinds": {}, "scales": {}})
+            st["calls"] += 1
+            st["tokens"] += tokens
+            st["kinds"][kind] = st["kinds"].get(kind, 0) + tokens
+            st["scales"][int(scale)] = (st["scales"].get(int(scale), 0)
+                                        + tokens)
+
+    def tokens(self, site: str, kind: Optional[str] = None) -> int:
+        with self._lock:
+            st = self._sites.get(site)
+            if st is None:
+                return 0
+            return st["tokens"] if kind is None else st["kinds"].get(kind, 0)
+
+    def weighted_scale(self, site: str) -> Optional[int]:
+        """Traffic-weighted mean scale observed at ``site`` (None if no
+        traffic) — every token votes with the context size it ran at."""
+        with self._lock:
+            st = self._sites.get(site)
+            if not st or not st["scales"]:
+                return None
+            total = sum(st["scales"].values())
+            return int(round(sum(s * w for s, w in st["scales"].items())
+                             / max(total, 1)))
+
+    def hot_sites(self, min_tokens: int = 1) -> List[str]:
+        """Sites with at least ``min_tokens`` observed, hottest first."""
+        with self._lock:
+            return [site for site, st in
+                    sorted(self._sites.items(),
+                           key=lambda kv: -kv[1]["tokens"])
+                    if st["tokens"] >= min_tokens]
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {site: {"calls": st["calls"], "tokens": st["tokens"],
+                           "kinds": dict(st["kinds"]),
+                           "scales": dict(st["scales"])}
+                    for site, st in self._sites.items()}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._sites.clear()
+
+
+telemetry = Telemetry()

@@ -1,1 +1,3 @@
-from repro.serve.decode import BatchedServer, generate
+from repro.serve.decode import BatchedServer, Request, generate
+from repro.serve.autotune import (AutotuneConfig, AutotuneReport,
+                                  ServeAutotuner, snap_scale)

@@ -4,15 +4,32 @@
 replaced from the pending queue by re-prefilling into their cache rows
 (slot recycling).  This is the serving loop the decode_* dry-run cells
 lower one step of.
+
+The server participates in the online autotune loop (serve.autotune):
+
+* **Telemetry** — every admitted prompt and decoded token is reported to
+  the per-site telemetry in ``repro.kernels.ops`` (prefill events carry
+  the prompt length as their scale; decode events the context length),
+  so a background campaign optimizes at the traffic-weighted scales the
+  server actually runs.
+* **Swap epochs** — the jit-compiled prefill/decode step functions bake
+  the active registry impl in at trace time, so the server watches
+  ``ops.registry_epoch()`` and re-traces at the next step boundary after
+  any registry mutation (a hot-swap).  In-flight requests and their KV
+  cache rows are untouched: the swap only changes how *future* traffic
+  is computed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+import itertools
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
 
 
 def generate(model, params, prompts: jnp.ndarray, *, max_new: int = 16,
@@ -51,30 +68,60 @@ class BatchedServer:
     """Continuous-batching-lite greedy server over a fixed slot count."""
 
     def __init__(self, model, params, *, slots: int = 4, prompt_len: int = 32,
-                 max_len: int = 128):
+                 max_len: int = 128, eos_id: Optional[int] = None,
+                 telemetry_site: str = "attention",
+                 telemetry: Optional[ops.Telemetry] = None):
         assert model.cfg.family != "encdec", "use generate() for enc-dec"
         self.model = model
         self.params = params
         self.slots = slots
         self.prompt_len = prompt_len
         self.max_len = max_len
+        self.eos_id = eos_id
+        self.site = telemetry_site
+        self.telemetry = telemetry if telemetry is not None else ops.telemetry
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
+        self.finished: List[Request] = []
         self.pos = np.zeros(slots, np.int32)
         self.cache = model.init_cache(slots, max_len)
-        self._step = jax.jit(model.decode_step)
+        self.swap_epochs = 0                      # hot-swap re-traces so far
+        self._rid = itertools.count()
+        self._epoch = ops.registry_epoch()
+        self._trace_steps()
+
+    def _trace_steps(self) -> None:
+        # fresh jit objects re-consult the registry at trace time, so a
+        # newly-installed impl takes effect here and only here
+        self._step = jax.jit(self.model.decode_step)
         self._prefill_one = jax.jit(
-            lambda p, t: model.prefill(p, t, max_len=max_len))
+            lambda p, t: self.model.prefill(p, t, max_len=self.max_len))
+
+    def _refresh_impls(self) -> None:
+        """Swap epoch: if the ops registry changed since the last trace,
+        re-trace the step functions at this step boundary.  In-flight
+        requests keep their cache rows and continue undisturbed."""
+        epoch = ops.registry_epoch()
+        if epoch != self._epoch:
+            self._epoch = epoch
+            self.swap_epochs += 1
+            self._trace_steps()
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
-        req = Request(rid=len(self.queue), prompt=prompt, max_new=max_new)
+        req = Request(rid=next(self._rid), prompt=prompt, max_new=max_new)
         self.queue.append(req)
         return req
+
+    def _finish(self, req: Request, slot: Optional[int]) -> None:
+        req.done = True
+        self.finished.append(req)
+        if slot is not None:
+            self.active[slot] = None          # slot recycled at next admit
 
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.pop(0)       # FIFO drain order
                 logits, cache1 = self._prefill_one(
                     self.params, jnp.asarray(req.prompt[None, :]))
                 # splice the single-sequence cache into slot s
@@ -84,12 +131,20 @@ class BatchedServer:
                 tok = int(jnp.argmax(
                     logits[0, -1, :self.model.cfg.vocab_size]))
                 req.tokens.append(tok)
+                self.telemetry.observe(self.site, scale=len(req.prompt),
+                                       tokens=len(req.prompt),
+                                       kind="prefill")
+                if ((self.eos_id is not None and tok == self.eos_id)
+                        or len(req.tokens) >= req.max_new):
+                    self._finish(req, None)   # done at prefill: keep slot free
+                    continue
                 self.active[s] = req
                 self.pos[s] = len(req.prompt)
 
     def step(self):
         """One decode step for all occupied slots (single pos: the server
         keeps slots aligned by padding prompts to prompt_len)."""
+        self._refresh_impls()
         self._admit()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
@@ -104,15 +159,19 @@ class BatchedServer:
             logits[:, -1, :self.model.cfg.vocab_size], axis=-1))
         for s in live:
             req = self.active[s]
-            req.tokens.append(int(nxt[s]))
-            if len(req.tokens) >= req.max_new:
-                req.done = True
-                self.active[s] = None
+            tok = int(nxt[s])
+            req.tokens.append(tok)
+            # context length this token was decoded at (traffic weighting)
+            self.telemetry.observe(
+                self.site, scale=int(self.pos[s]) + len(req.tokens) - 1,
+                tokens=1, kind="decode")
+            if ((self.eos_id is not None and tok == self.eos_id)
+                    or len(req.tokens) >= req.max_new):
+                self._finish(req, s)
         return True
 
     def run(self, max_steps: int = 1000) -> List[Request]:
-        finished: List[Request] = []
         for _ in range(max_steps):
             if not self.step() and not self.queue:
                 break
-        return finished
+        return self.finished

@@ -9,6 +9,7 @@ from repro.core import (Campaign, CaseJob, CPUPlatform, EvalCache,
                         EvalRecord, HeuristicProposer, MEPConstraints,
                         OptConfig, PatternStore, ResultsDB,
                         TPUModelPlatform, canonical_spec, get_case, optimize)
+from repro.core.kernelcase import ArraySpec, KernelCase
 from repro.core.proposer import Proposer
 
 FAST = MEPConstraints(t_max_s=2.0, r=5, k=1)
@@ -93,6 +94,90 @@ def test_results_db_roundtrip(tmp_path):
 
 
 # ------------------------------------------------------------- campaign ---
+def test_results_db_concurrent_writers(tmp_path):
+    """Two threads journaling interleaved campaigns: every line stays
+    valid JSON and no record is lost (extends the torn-line skip test —
+    torn lines must come only from crashes, never from interleaving)."""
+    db = ResultsDB(str(tmp_path / "campaign.jsonl"))
+    n = 200
+
+    def journal(writer):
+        for i in range(n):
+            db.append("round", writer=writer, i=i,
+                      candidates=[{"variant": {"block_m": 64}, "time_s": 1.0}])
+
+    threads = [threading.Thread(target=journal, args=(w,)) for w in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    with open(db.path) as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    assert len(records) == 2 * n
+    for w in range(2):
+        assert sorted(r["i"] for r in records if r["writer"] == w) \
+            == list(range(n))
+
+
+# ------------------------------------------------- cache invalidation ----
+def _toy_case(build):
+    return KernelCase(
+        name="digest_toy", suite="hpc", family="elementwise",
+        ref=lambda x: x * 2.0, build=build,
+        input_specs=lambda s: [ArraySpec((s,), "float32")],
+        variant_space={"mul": [2.0]}, baseline_variant={"mul": 2.0},
+        flops=lambda s: float(s), scales=(64,))
+
+
+def _build_v1(variant, impl="jnp"):
+    m = variant["mul"]
+    return lambda x: x * m
+
+
+def _build_v2(variant, impl="jnp"):      # the "edited" kernel source:
+    m = variant["mul"]                   # same semantics, different code
+    return lambda x: x * m + 0.0
+
+
+def test_evalcache_source_digest_invalidation():
+    """Editing a case's build source must invalidate its cached timings:
+    the spec key carries a per-case source digest, so the mutated case
+    misses instead of replaying the old kernel's numbers."""
+    case_v1, case_v2 = _toy_case(_build_v1), _toy_case(_build_v2)
+    assert case_v1.source_digest() != case_v2.source_digest()
+    # a case derived via dataclasses.replace re-derives its digest rather
+    # than inheriting the stale cached one
+    import dataclasses
+    derived = dataclasses.replace(case_v1, build=_build_v2)
+    assert derived.source_digest() == case_v2.source_digest()
+    cache = EvalCache()
+    plat = TPUModelPlatform()
+    r1 = optimize(case_v1, plat, HeuristicProposer(0), cfg=FAST_CFG,
+                  constraints=FAST, cache=cache)
+    assert r1.cache_misses >= 1 and r1.cache_hits == 0
+    # unchanged source: everything replays from cache
+    r1b = optimize(case_v1, plat, HeuristicProposer(0), cfg=FAST_CFG,
+                   constraints=FAST, cache=cache)
+    assert r1b.cache_misses == 0 and r1b.cache_hits >= 1
+    # mutated source, same case name/variant/scale: cache miss
+    r2 = optimize(case_v2, plat, HeuristicProposer(0), cfg=FAST_CFG,
+                  constraints=FAST, cache=cache)
+    assert r2.cache_misses >= 1 and r2.cache_hits == 0
+
+
+# --------------------------------------------------------- stop event ----
+def test_campaign_stop_event_interrupts_at_round_boundary():
+    stop = threading.Event()
+    stop.set()
+    camp = Campaign(TPUModelPlatform(), cache=EvalCache())
+    res = camp.run([CaseJob(get_case("gemm"), HeuristicProposer(0),
+                            cfg=FAST_CFG, constraints=FAST)], stop=stop)[0]
+    assert res.stop_reason == "stop requested"
+    assert res.rounds == []
+    assert res.best_variant == dict(get_case("gemm").baseline_variant)
+    assert res.speedup == pytest.approx(1.0)
+
+
 def test_campaign_equals_serial_fixed_seed():
     """Same best variant and time as the serial optimize() path, for a
     fixed seed, on a deterministic (analytic) platform."""

@@ -1,0 +1,153 @@
+"""core.integrate: install preconditions, nested install/uninstall
+ordering over the versioned registry, and the guarded-install rollback
+paths (simulated FE failure + simulated perf regression / divergence)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import get_case, integrate
+from repro.core.integrate import guarded_install
+from repro.core.kernelcase import ArraySpec, KernelCase
+from repro.kernels import ops
+
+SITE = "toy_site"
+
+
+def _mk_case(build):
+    return KernelCase(
+        name="toy", suite="hpc", family="elementwise",
+        ref=lambda x: x * 2.0, build=build,
+        input_specs=lambda s: [ArraySpec((s,), "float32")],
+        variant_space={"mul": [2.0, 3.0]}, baseline_variant={"mul": 2.0},
+        flops=lambda s: float(s), scales=(64, 128), app_site=SITE)
+
+
+def _good_build(variant, impl="jnp"):
+    m = variant["mul"]
+    return lambda x: x * m
+
+
+GOOD = _mk_case(_good_build)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    ops.clear_all()
+    yield
+    ops.clear_all()
+
+
+# ------------------------------------------------------------ install ----
+def test_install_requires_app_site():
+    gemm = get_case("gemm")          # standalone benchmark, no splice point
+    assert not gemm.app_site
+    with pytest.raises(ValueError, match="no app_site"):
+        integrate.install(gemm, gemm.baseline_variant)
+    with pytest.raises(ValueError, match="no app_site"):
+        guarded_install(gemm, gemm.baseline_variant, scale=256)
+
+
+def test_nested_install_uninstall_ordering():
+    g1 = integrate.install(GOOD, {"mul": 2.0})
+    fn1 = ops.get_impl(SITE)
+    g2 = integrate.install(GOOD, {"mul": 3.0})
+    assert g2 > g1 and ops.generation(SITE) == g2
+    assert float(ops.get_impl(SITE)(np.float32(1.0))) == 3.0
+    # inner uninstall restores exactly what its install replaced
+    integrate.uninstall(GOOD)
+    assert ops.generation(SITE) == g1
+    assert ops.get_impl(SITE) is fn1
+    integrate.uninstall(GOOD)
+    assert ops.get_impl(SITE) is None and ops.generation(SITE) == 0
+
+
+def test_use_impl_nesting_restores_generation():
+    f1, f2 = (lambda x: x), (lambda x: -x)
+    with ops.use_impl(SITE, f1):
+        with ops.use_impl(SITE, f2):
+            assert ops.get_impl(SITE) is f2
+        assert ops.get_impl(SITE) is f1
+    assert ops.get_impl(SITE) is None
+
+
+def test_rollback_to_generation_pops_everything_above():
+    g1 = ops.install(SITE, lambda x: x)
+    ops.install(SITE, lambda x: x + 1)
+    ops.install(SITE, lambda x: x + 2)
+    assert ops.rollback(SITE, g1) == g1
+    assert len(ops.history(SITE)) == 1
+
+
+# ----------------------------------------------------- guarded install ----
+def test_guarded_install_happy_path():
+    res = guarded_install(GOOD, {"mul": 2.0}, scale=64)
+    assert res.active and res.fe_ok and res.reason == "installed"
+    assert ops.generation(SITE) == res.generation > 0
+    entry = ops.active_entry(SITE)
+    assert entry.info["variant"] == {"mul": 2.0}
+    assert entry.info["case"] == "toy"
+
+
+def test_guarded_install_fe_failure_never_touches_registry():
+    before = ops.install(SITE, lambda x: x * 2.0)
+    fn_before = ops.get_impl(SITE)
+    res = guarded_install(GOOD, {"mul": 3.0}, scale=64)   # ref is x*2
+    assert not res.installed and not res.fe_ok
+    assert res.reason.startswith("fe_fail")
+    assert ops.generation(SITE) == before
+    assert ops.get_impl(SITE) is fn_before
+
+
+def test_guarded_install_broken_build_is_contained():
+    def boom_build(variant, impl="jnp"):
+        raise RuntimeError("candidate failed to build")
+    res = guarded_install(_mk_case(boom_build), {"mul": 2.0}, scale=64)
+    assert not res.installed and res.reason.startswith("fe_error")
+    assert ops.get_impl(SITE) is None
+
+
+def test_guarded_install_perf_regression_rolls_back():
+    first = guarded_install(GOOD, {"mul": 2.0}, scale=64)
+    fn_before = ops.get_impl(SITE)
+
+    def probe():                    # integrated step: slow iff swapped
+        time.sleep(0.02 if ops.generation(SITE) > first.generation
+                   else 0.001)
+        return np.zeros(4)
+
+    res = guarded_install(GOOD, {"mul": 2.0}, scale=64, probe=probe,
+                          max_regression=0.5, r=2, k=0)
+    assert res.installed and res.rolled_back and not res.active
+    assert res.reason.startswith("regressed")
+    # registry restored to the prior generation and impl
+    assert ops.generation(SITE) == first.generation
+    assert ops.get_impl(SITE) is fn_before
+
+
+def test_guarded_install_divergence_rolls_back():
+    first = guarded_install(GOOD, {"mul": 2.0}, scale=64)
+
+    def probe():                    # integrated step: diverges iff swapped
+        swapped = ops.generation(SITE) > first.generation
+        return np.full(4, 1.0 if swapped else 0.0)
+
+    res = guarded_install(GOOD, {"mul": 2.0}, scale=64, probe=probe,
+                          atol=1e-3, r=2, k=0)
+    assert res.rolled_back and res.reason.startswith("diverged")
+    assert res.probe_max_abs_err == pytest.approx(1.0)
+    assert ops.generation(SITE) == first.generation
+
+
+def test_guarded_install_probe_error_rolls_back():
+    first = guarded_install(GOOD, {"mul": 2.0}, scale=64)
+
+    def probe():
+        if ops.generation(SITE) > first.generation:
+            raise RuntimeError("integrated step crashed")
+        return np.zeros(2)
+
+    res = guarded_install(GOOD, {"mul": 2.0}, scale=64, probe=probe,
+                          r=2, k=0)
+    assert res.rolled_back and res.reason.startswith("probe_error")
+    assert ops.generation(SITE) == first.generation

@@ -1,0 +1,182 @@
+"""End-to-end online autotune loop on CPU (acceptance test):
+
+traffic is served through ``BatchedServer`` → telemetry accumulates →
+a background-style campaign finds a faster variant at the observed
+traffic scale → ``guarded_install`` hot-swaps it into the ops registry
+without interrupting in-flight requests → an injected faulty variant is
+rolled back with the registry restored to the prior generation."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EvalCache, MEPConstraints, OptConfig, ResultsDB,
+                        TPUModelPlatform, get_case)
+from repro.core.integrate import guarded_install
+from repro.kernels import ops
+from repro.serve import AutotuneConfig, ServeAutotuner, snap_scale
+from serving_stub import make_server, prompts
+
+FAST = MEPConstraints(t_max_s=2.0, r=5, k=1)
+FAST_CFG = OptConfig(d_rounds=2, n_candidates=3, r=5, k=1)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    ops.clear_all()
+    ops.telemetry.reset()
+    yield
+    ops.clear_all()
+    ops.telemetry.reset()
+
+
+def make_autotuner(db=None, **cfg_kw):
+    cfg_kw.setdefault("min_tokens", 1)
+    cfg_kw.setdefault("opt", FAST_CFG)
+    cfg_kw.setdefault("constraints", FAST)
+    cfg_kw.setdefault("probe_r", 2)
+    cfg_kw.setdefault("probe_k", 0)
+    # the campaign metric is the analytic TPU model but the guard probe
+    # wall-clocks real CPU execution; be lenient about CPU-side noise
+    cfg_kw.setdefault("max_regression", 20.0)
+    cfg_kw.setdefault("interval_s", 0.05)
+    return ServeAutotuner(TPUModelPlatform(), config=AutotuneConfig(**cfg_kw),
+                          cache=EvalCache(), db=db)
+
+
+def test_snap_scale_picks_nearest_supported():
+    case = get_case("attention_prefill")         # scales (256, ..., 2048)
+    assert snap_scale(case, 12) == 256
+    assert snap_scale(case, 700) == 512
+    assert snap_scale(case, 4000) == 2048
+
+
+def test_autotune_end_to_end_swap_and_rollback(tmp_path):
+    db = ResultsDB(str(tmp_path / "autotune.jsonl"))
+
+    # ---- control: the same workload served untouched, for comparison ----
+    control = make_server(slots=2, max_len=32)
+    control_reqs = [control.submit(p, max_new=6) for p in prompts(4)]
+    control.run()
+
+    # ---- 1. serve traffic: telemetry accumulates at the attention site --
+    srv = make_server(slots=2, max_len=32)
+    reqs = [srv.submit(p, max_new=6) for p in prompts(4)]
+    srv.step()
+    srv.step()                     # requests in flight, partially decoded
+    assert ops.telemetry.tokens("attention") > 0
+
+    # ---- 2. campaign over the observed hotspot at the observed scale ----
+    tuner = make_autotuner(db=db)
+    rep = tuner.run_once()
+    assert rep.hot == {"attention": 256}         # observed ~8-12 → snapped
+    assert len(rep.results) == 1
+    res = rep.results[0]
+    assert res.speedup > 1.01                    # found a faster variant
+    assert res.best_variant != res.baseline_variant
+
+    # ---- 3. winner hot-swapped through guarded_install ------------------
+    assert len(rep.installed) == 1
+    swap = rep.installed[0]
+    assert swap.site == "attention" and swap.fe_ok and swap.active
+    gen_winner = ops.generation("attention")
+    assert gen_winner == swap.generation > 0
+    assert ops.active_entry("attention").info["variant"] == res.best_variant
+
+    # ---- 4. serving picks up the swap without interrupting in-flight ----
+    srv.step()
+    assert srv.swap_epochs == 1
+    srv.run()
+    assert all(r.done for r in reqs)
+    for r, c in zip(reqs, control_reqs):
+        assert r.tokens == c.tokens, f"request {r.rid} diverged across swap"
+    # fresh traffic (post-swap prefill goes through the new impl)
+    post = srv.submit(prompts(1)[0], max_new=4)
+    srv.run()
+    assert post.done and post.tokens == control_reqs[0].tokens[:4]
+
+    # ---- 5a. injected faulty variant: FE gate keeps it out --------------
+    case = get_case("attention_prefill")
+
+    def faulty_build(variant, impl="jnp"):
+        real = case.build(variant, impl=impl)
+        if variant.get("faulty"):
+            return lambda q, k, v, causal=True, softcap=0.0: \
+                real(q, k, v) * 1e3
+        return real
+
+    faulty_case = dataclasses.replace(case, build=faulty_build)
+    bad = guarded_install(faulty_case, dict(case.baseline_variant,
+                                            faulty=True), scale=256)
+    assert not bad.installed and bad.reason.startswith("fe_fail")
+    assert ops.generation("attention") == gen_winner
+
+    # ---- 5b. injected regressing variant: installed, then rolled back ---
+    fn_winner = ops.get_impl("attention")
+
+    def probe():                   # integrated step: slow iff swapped again
+        time.sleep(0.02 if ops.generation("attention") > gen_winner
+                   else 0.001)
+        return np.zeros(2)
+
+    worse = guarded_install(case, dict(case.baseline_variant), scale=256,
+                            probe=probe, max_regression=0.5, r=2, k=0)
+    assert worse.installed and worse.rolled_back
+    assert ops.generation("attention") == gen_winner
+    assert ops.get_impl("attention") is fn_winner
+
+    # ---- journal captured the loop --------------------------------------
+    kinds = [r["kind"] for r in db.records()]
+    assert "autotune_cycle" in kinds and "autotune_swap" in kinds
+    cyc = next(db.records("autotune_cycle"))
+    assert cyc["hot"] == {"attention": 256}
+    assert cyc["swaps"] and cyc["swaps"][0]["active"]
+
+    # after the swap the server still serves (registry mutations during
+    # 5a/5b only bump epochs, never break traffic)
+    late = srv.submit(prompts(1)[0], max_new=3)
+    srv.run()
+    assert late.done
+
+
+def test_second_cycle_is_noop_until_traffic_shifts():
+    srv = make_server(slots=2, max_len=32)
+    for p in prompts(3):
+        srv.submit(p, max_new=4)
+    srv.run()
+    tuner = make_autotuner()
+    rep1 = tuner.run_once()
+    assert rep1.hot and rep1.results
+    # same traffic profile → site already tuned at that snap → skipped
+    rep2 = tuner.run_once()
+    assert rep2.hot == {} and rep2.skipped
+    assert tuner.tuned_scales == {"attention": 256}
+
+
+def test_background_thread_start_stop():
+    tuner = make_autotuner()       # no traffic: cycles skip instantly
+    th = tuner.start()
+    assert th is tuner.start()     # idempotent
+    deadline = time.time() + 5.0
+    while not tuner.reports and time.time() < deadline:
+        time.sleep(0.01)
+    assert tuner.reports and tuner.reports[0].skipped
+    tuner.stop()
+    assert not th.is_alive()
+
+
+def test_stop_event_interrupts_campaign_mid_flight():
+    srv = make_server(slots=2, max_len=32)
+    for p in prompts(3):
+        srv.submit(p, max_new=4)
+    srv.run()
+    tuner = make_autotuner(opt=OptConfig(d_rounds=8, n_candidates=3,
+                                         r=5, k=1), install=True)
+    tuner._stop.set()              # stop requested before the cycle
+    rep = tuner.run_once()
+    assert rep.results and rep.results[0].stop_reason == "stop requested"
+    assert rep.swaps == []         # no install on a stopped cycle
+    # interrupted sites stay un-tuned so the next cycle resumes them
+    assert "attention" not in tuner.tuned_scales
