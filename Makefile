@@ -1,4 +1,4 @@
-.PHONY: verify test-fast bench bench-full
+.PHONY: verify test-fast test-workers bench bench-full
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -8,6 +8,12 @@ verify:
 test-fast:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
 		--ignore=tests/test_core_properties.py
+
+# Worker-fabric suite: subprocess-executor smoke tests, fault paths,
+# cross-process cache dedup (the CI test-workers job)
+test-workers:
+	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_workers.py
 
 # Campaign-engine benchmark tables (CI-scale parameters)
 bench:

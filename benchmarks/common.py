@@ -46,15 +46,19 @@ class BenchContext:
     cache: Optional[EvalCache] = None
     db: Optional[ResultsDB] = None
     max_workers: Optional[int] = None
+    executor: Optional[str] = None   # inprocess | subprocess | local-cluster
 
     def campaign(self, platform) -> Campaign:
-        # --jobs only applies to concurrency-safe (analytic) platforms;
+        # --workers only applies to concurrency-safe (analytic) platforms;
         # measured platforms keep the engine's one-worker clamp so a
-        # global override can't corrupt eq. 3 wall-clock timing.
+        # global override can't corrupt eq. 3 wall-clock timing.  (The
+        # local-cluster executor additionally pins measured platforms to
+        # one exclusive worker process.)
         workers = self.max_workers \
             if getattr(platform, "concurrency_safe", False) else None
         return Campaign(platform, patterns=self.store, cache=self.cache,
-                        db=self.db, max_workers=workers, verbose=True)
+                        db=self.db, max_workers=workers,
+                        executor=self.executor, verbose=True)
 
 
 def ensure_ctx(ctx) -> BenchContext:

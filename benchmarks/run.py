@@ -4,7 +4,14 @@ Prints ``name,us_per_call,derived`` CSV per kernel plus per-table averages,
 and writes the aggregate JSON next to the dry-run results.
 
   PYTHONPATH=src python -m benchmarks.run [--tables 1,2,3,4] [--full]
-                                          [--jobs N] [--out results/bench.json]
+                                          [--workers N] [--executor KIND]
+                                          [--out results/bench.json]
+
+``--workers N`` sets the evaluation-fabric width and ``--executor``
+picks the transport (inprocess | subprocess | local-cluster); table 6
+(``--tables 6``) is the worker-fabric demonstration — in-process vs
+subprocess equivalence plus the wall-clock scaling table, written to
+``results/workers_demo.json``.
 
 ``--full`` (or REPRO_BENCH_FULL=1) uses the paper's parameters
 (D=6/10, N=3/5, R=30, k=3); default CI mode keeps the suite minutes-scale.
@@ -44,8 +51,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper iteration parameters (slow)")
     ap.add_argument("--out", default="results/bench.json")
-    ap.add_argument("--jobs", type=int, default=None,
-                    help="campaign workers (default: env/platform policy)")
+    ap.add_argument("--jobs", "--workers", dest="workers", type=int,
+                    default=None,
+                    help="evaluation-fabric width "
+                         "(default: env/platform policy)")
+    ap.add_argument("--executor", default=None,
+                    choices=["inprocess", "subprocess", "local-cluster"],
+                    help="evaluation transport (default: in-process; "
+                         "REPRO_CAMPAIGN_EXECUTOR overrides)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the persistent evaluation cache")
     args = ap.parse_args()
@@ -55,7 +68,8 @@ def main() -> None:
     from repro.core import EvalCache, PatternStore, ResultsDB
     from benchmarks.common import BenchContext
     from benchmarks import (table1_polybench_a, table2_polybench_b,
-                            table3_appsdk, table4_hotspots, table5_serve)
+                            table3_appsdk, table4_hotspots, table5_serve,
+                            table6_workers)
 
     if args.out:
         res_dir = os.path.dirname(args.out) or "."
@@ -66,11 +80,11 @@ def main() -> None:
             store=PatternStore(os.path.join(res_dir, "patterns.json")),
             cache=cache,
             db=ResultsDB(os.path.join(res_dir, "campaign.jsonl")),
-            max_workers=args.jobs)
+            max_workers=args.workers, executor=args.executor)
     else:           # --out '': leave no state on disk
         cache = None if args.no_cache else EvalCache()
         ctx = BenchContext(store=PatternStore(), cache=cache,
-                           max_workers=args.jobs)
+                           max_workers=args.workers, executor=args.executor)
 
     tables = {
         "1": ("table1_polybench_a", table1_polybench_a.main),
@@ -78,6 +92,7 @@ def main() -> None:
         "3": ("table3_appsdk", table3_appsdk.main),
         "4": ("table4_hotspots", table4_hotspots.main),
         "5": ("table5_serve_autotune", table5_serve.main),
+        "6": ("table6_workers", table6_workers.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""Campaign worker process entry point (spawned by SubprocessExecutor /
+LocalClusterExecutor).
+
+Protocol: line-JSON over stdio.  Each stdin line is one serialized eval
+spec (``repro.core.workers.job_to_spec``); each stdout line is the full
+``OptResult`` wire dict (or an error record).  Everything else — jax
+chatter, verbose campaign prints — is redirected to stderr so the
+protocol channel stays clean.
+
+Runnable by hand for debugging:
+
+    echo '<spec json>' | PYTHONPATH=src python scripts/worker_main.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.core.workers import worker_main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(worker_main())

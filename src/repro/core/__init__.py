@@ -8,17 +8,23 @@ from repro.core.kernelcase import (ArraySpec, KernelCase, Variant, cases,
 from repro.core.datagen import DataBudget, generate
 from repro.core.mep import MEP, MEPConstraints, build_mep, emit_script
 from repro.core.profiler import (CPUPlatform, Platform, TimingResult,
-                                 TPUModelPlatform, trimmed_mean, wallclock)
+                                 TPUModelPlatform, platform_from_name,
+                                 register_platform, trimmed_mean, wallclock)
 from repro.core.fe import FEResult, check as fe_check, outputs_match
-from repro.core.aer import AER, RepairRecord
+from repro.core.aer import AER, RepairRecord, WorkerFault
 from repro.core.patterns import Pattern, PatternStore
 from repro.core.proposer import (DirectProposer, HeuristicProposer,
-                                 LLMProposer, OfflineError, Proposer,
-                                 RoundState, make_proposer)
+                                 LLMBatcher, LLMProposer, OfflineError,
+                                 Proposer, RoundState, make_proposer,
+                                 proposer_from_spec)
 from repro.core.evalcache import (EvalCache, EvalRecord, ResultsDB,
-                                  canonical_spec, spec_key)
+                                  canonical_spec, default_namespace,
+                                  spec_key)
 from repro.core.optimizer import (CandidateLog, Evaluator, OptConfig,
                                   OptResult, RoundLog, optimize)
-from repro.core.campaign import Campaign, CaseJob
+from repro.core.workers import (CaseJob, Executor, InProcessExecutor,
+                                LocalClusterExecutor, SubprocessExecutor,
+                                WorkerContext, make_executor, run_case_job)
+from repro.core.campaign import Campaign
 from repro.core import integrate
 from repro.core import extraction

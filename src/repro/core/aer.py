@@ -22,11 +22,32 @@ from repro.core.profiler import VMEM_BYTES, variant_vmem_bytes
 
 @dataclass
 class RepairRecord:
-    stage: str            # build | compile | run | fe
+    stage: str            # build | compile | run | fe | worker
     error: str
     rule: str
     before: Variant
     after: Variant
+
+
+class WorkerFault(RuntimeError):
+    """Process-level evaluation fault — the AER taxonomy's fourth class,
+    beside build/fe/run failures: the *worker* evaluating the MEP died
+    (``kind="crash"``) or exceeded its wall-clock budget
+    (``kind="timeout"``).  Unlike the variant-level classes there is no
+    variant to repair; the automatic remedy is worker replacement — the
+    executor respawns the process and retries the job on a fresh worker,
+    raising this fault only once the retry budget is spent."""
+
+    def __init__(self, kind: str, job: str, detail: str = "",
+                 attempts: int = 1):
+        self.kind = kind              # crash | timeout
+        self.job = job
+        self.detail = detail
+        self.attempts = attempts
+        super().__init__(
+            f"worker {kind} evaluating job {job!r} "
+            f"(after {attempts} attempt{'s' if attempts != 1 else ''})"
+            + (f": {detail}" if detail else ""))
 
 
 def _largest_divisor_leq(n: int, b: int) -> int:

@@ -3,7 +3,7 @@
 The paper optimizes one hotspot at a time inside its MEP; a *campaign*
 runs the same §3.2 round structure over many ``KernelCase``s at once:
 
-    for each case (concurrently, over a bounded worker pool):
+    for each case (concurrently, over an evaluation executor):
         d = 0..D-1:                                  eq. 5 outer loop
             propose N candidates from K^(d)          (LLM / heuristic)
             evaluate each: build → FE → time         eq. 3–4, AER-wrapped
@@ -11,26 +11,42 @@ runs the same §3.2 round structure over many ``KernelCase``s at once:
             stop when the round's gain ≤ 1 + eps     (uniform early stop)
         record the winning delta into the PatternStore (PPI)
 
-What the engine adds over a serial loop:
+``Campaign`` is the *scheduler* half: it owns the shared evaluation
+cache, pattern store, and results journal, and hands the per-case search
+to an ``Executor`` (``repro.core.workers``) — it never touches an MEP
+itself.  Three transports share one code path:
 
-* **Bounded concurrency** — cases are scheduled onto a worker pool.
-  Platforms advertise ``concurrency_safe``; measured platforms (CPU
-  wall-clock) are clamped to one worker so parallel timing can't pollute
-  eq. 3's trimmed mean, while model platforms (analytic roofline) fan
-  out fully.  Override with ``max_workers`` / REPRO_CAMPAIGN_WORKERS.
+* ``InProcessExecutor``   (default) — bounded thread pool; platforms
+  advertise ``concurrency_safe``, measured (CPU wall-clock) platforms
+  are clamped to one worker so parallel timing can't pollute eq. 3's
+  trimmed mean, while model platforms fan out fully.
+* ``SubprocessExecutor``  — one MEP per worker process; jobs ship as
+  serialized eval specs, the JSONL cache/journal on shared storage are
+  the only shared state (advisory file locks keep cross-process
+  in-flight dedup intact).
+* ``LocalClusterExecutor`` — persistent subprocess workers with
+  per-worker platform pinning (measured platforms exclusive, analytic
+  fan-out).
+
+Select with ``executor=`` (an ``Executor``, or a kind string:
+``inprocess`` / ``subprocess`` / ``local-cluster``), or the
+REPRO_CAMPAIGN_EXECUTOR / REPRO_CAMPAIGN_WORKERS environment knobs.
+
+Shared-state guarantees, regardless of transport:
+
 * **Shared evaluation cache** — every build/FE/time outcome is
   content-addressed in an ``EvalCache`` keyed by the full evaluation
   spec, so duplicate candidates (across proposers, cases, rounds, or a
   previous campaign run against the same cache file) are never paid for
   twice.  In-flight dedup means two workers racing on the same key do
-  the work once.
-* **MEP dedup** — jobs that target the same (case, platform, seed,
-  constraints) share one MEP, so input generation and scale probing
-  happen once per case per campaign.
+  the work once — across threads and across processes.
+* **MEP dedup** — in-process jobs that target the same (case, platform,
+  seed, constraints, scale) share one MEP; each worker process builds
+  its own (one MEP per worker process).
 * **Persistent results DB** — campaign_start / round / case_result /
-  campaign_end records are journaled to JSONL (``ResultsDB``) so a
-  campaign's trajectory survives restarts and backs the BENCH_*
-  snapshots compared across PRs.
+  worker_fault / campaign_end records are journaled to JSONL
+  (``ResultsDB``) so a campaign's trajectory survives restarts and backs
+  the BENCH_* snapshots compared across PRs.
 
 ``repro.core.optimizer.optimize`` remains the serial API: it is a
 one-case campaign with ``max_workers=1`` and no cache unless given one.
@@ -40,46 +56,29 @@ from __future__ import annotations
 import os
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional, Union
 
-from repro.core.aer import AER
 from repro.core.evalcache import EvalCache, ResultsDB
-from repro.core.kernelcase import KernelCase
-from repro.core.mep import MEP, MEPConstraints, build_mep
-from repro.core.optimizer import (CandidateLog, Evaluator, OptConfig,
-                                  OptResult, RoundLog)
+from repro.core.optimizer import OptResult
 from repro.core.patterns import PatternStore
 from repro.core.profiler import Platform
-from repro.core.proposer import Proposer, RoundState
+from repro.core.workers import (CaseJob, Executor, InProcessExecutor,
+                                WorkerContext, make_executor)
 
-
-@dataclass
-class CaseJob:
-    """One unit of campaign work: optimize ``case`` with ``proposer``."""
-    case: KernelCase
-    proposer: Proposer
-    cfg: OptConfig = OptConfig()
-    constraints: MEPConstraints = MEPConstraints()
-    seed: int = 0
-    mep: Optional[MEP] = None       # pre-built MEP (else built & shared)
-    label: str = ""                 # distinguishes jobs on the same case
-
-    @property
-    def name(self) -> str:
-        return self.label or self.case.name
+__all__ = ["Campaign", "CaseJob"]
 
 
 class Campaign:
     """Scheduler that optimizes many kernels concurrently with shared
-    evaluation cache, pattern store, and results journal."""
+    evaluation cache, pattern store, and results journal, over a
+    pluggable evaluation executor."""
 
     def __init__(self, platform: Platform, *,
                  patterns: Optional[PatternStore] = None,
                  cache: Optional[EvalCache] = None,
                  db: Optional[ResultsDB] = None,
                  max_workers: Optional[int] = None,
+                 executor: Union[Executor, str, None] = None,
                  verbose: bool = False):
         self.platform = platform
         self.patterns = patterns
@@ -92,9 +91,14 @@ class Campaign:
                 # measured wall-clock: parallel timing corrupts eq. 3
                 max_workers = 1
         self.max_workers = max(1, max_workers)
-        self._mep_lock = threading.Lock()
-        self._mep_locks: Dict[Tuple, threading.Lock] = {}
-        self._meps: Dict[Tuple, MEP] = {}
+        if executor is None:
+            kind = os.environ.get("REPRO_CAMPAIGN_EXECUTOR", "inprocess")
+            executor = InProcessExecutor(self.max_workers) \
+                if kind in ("inprocess", "in-process", "thread") \
+                else make_executor(kind, workers=self.max_workers)
+        elif isinstance(executor, str):
+            executor = make_executor(executor, workers=self.max_workers)
+        self.executor = executor
 
     # ------------------------------------------------------------------
     def run(self, jobs: List[CaseJob], *,
@@ -106,9 +110,11 @@ class Campaign:
         and only then is the first failure re-raised.
 
         ``stop`` makes the campaign interruptible: a background owner
-        (the serve-layer autotuner) sets the event and every job winds
-        down at its next round boundary, returning a partial-but-valid
-        OptResult (``stop_reason="stop requested"``).  Because every
+        (the serve-layer autotuner) sets the event and every in-process
+        job winds down at its next round boundary, returning a
+        partial-but-valid OptResult (``stop_reason="stop requested"``);
+        out-of-process jobs already dispatched run to completion, while
+        queued ones return immediately-stopped results.  Because every
         evaluation went through the shared EvalCache, re-running the
         same jobs later resumes where the stopped campaign left off —
         completed rounds replay as cache hits."""
@@ -118,20 +124,14 @@ class Campaign:
             self.db.append("campaign_start", id=campaign_id,
                            platform=self.platform.name,
                            workers=self.max_workers,
+                           executor=self.executor.name,
                            jobs=[j.name for j in jobs])
 
-        def guarded(job: CaseJob):
-            try:
-                return self._optimize_case(job, campaign_id, stop_event=stop)
-            except Exception as e:  # noqa: BLE001 — isolate job failures
-                return e
-
-        if self.max_workers == 1 or len(jobs) == 1:
-            outcomes = [guarded(j) for j in jobs]
-        else:
-            with ThreadPoolExecutor(self.max_workers) as ex:
-                outcomes = [f.result() for f in
-                            [ex.submit(guarded, j) for j in jobs]]
+        ctx = WorkerContext(platform=self.platform, cache=self.cache,
+                            patterns=self.patterns, db=self.db,
+                            verbose=self.verbose)
+        outcomes = self.executor.run(jobs, ctx, campaign_id=campaign_id,
+                                     stop=stop)
         failures = [(j, o) for j, o in zip(jobs, outcomes)
                     if isinstance(o, Exception)]
         if self.db:
@@ -150,115 +150,3 @@ class Campaign:
                 f"campaign job {job.name!r} failed "
                 f"({len(failures)}/{len(jobs)} jobs failed)") from err
         return outcomes
-
-    # ------------------------------------------------------------------
-    def _get_mep(self, job: CaseJob) -> MEP:
-        # a pre-built MEP may be pinned to a non-default (e.g. observed
-        # traffic) scale, so its scale is part of the dedup identity
-        key = (job.case.name, self.platform.name, job.seed, job.constraints,
-               job.mep.scale if job.mep else None)
-        with self._mep_lock:
-            lk = self._mep_locks.setdefault(key, threading.Lock())
-        with lk:
-            if key not in self._meps:
-                self._meps[key] = job.mep or build_mep(
-                    job.case, self.platform, constraints=job.constraints,
-                    seed=job.seed)
-            return self._meps[key]
-
-    def _optimize_case(self, job: CaseJob, campaign_id: str, *,
-                       stop_event: Optional[threading.Event] = None
-                       ) -> OptResult:
-        """The paper's §3.2 search loop for one kernel (serial per case;
-        concurrency happens across cases)."""
-        t_start = time.time()
-        case, proposer, cfg = job.case, job.proposer, job.cfg
-        mep = self._get_mep(job)
-        aer = AER(case, mep.scale)
-        evaluator = Evaluator(mep, case, self.platform.name, aer, proposer,
-                              cfg, cache=self.cache)
-
-        baseline_v = dict(case.baseline_variant)
-        t_base = evaluator.measure_baseline(baseline_v)
-        best_v, best_t = baseline_v, t_base
-        res = OptResult(case.name, self.platform.name, proposer.name,
-                        baseline_v, t_base, best_v, best_t,
-                        mep_log=list(mep.log))
-
-        history: List[Dict[str, Any]] = []
-        errors: List[str] = []
-        for d in range(cfg.d_rounds):
-            if stop_event is not None and stop_event.is_set():
-                res.stop_reason = "stop requested"
-                res.mep_log.append(f"round {d}: stopped (stop requested)")
-                break
-            state = RoundState(
-                round=d, baseline_variant=best_v, baseline_time_s=best_t,
-                feedback=self.platform.profile_feedback(case, best_v,
-                                                        mep.scale),
-                history=history, errors=errors)
-            cands = proposer.propose(case, state, cfg.n_candidates)
-            rl = RoundLog(round=d, baseline_time_s=best_t)
-            for v in cands:
-                cl = evaluator.evaluate(v)
-                rl.candidates.append(cl)
-                history.append({"variant": cl.variant, "time_s": cl.time_s,
-                                "status": cl.status})
-                if cl.status != "ok":
-                    errors.append(cl.error)
-            feasible = [c for c in rl.candidates if c.status == "ok"]
-            # eq. 5 argmin + uniform early stop: ANY round (round 0
-            # included) that fails to improve by > eps ends the loop,
-            # with the reason logged.
-            stop = ""
-            if not feasible:
-                stop = "no feasible candidates"
-            else:
-                winner = min(feasible, key=lambda c: c.time_s)
-                rl.best_time_s = winner.time_s
-                gain = best_t / winner.time_s if winner.time_s else float("inf")
-                if winner.time_s < best_t:
-                    best_v, best_t = winner.variant, winner.time_s
-                rl.improved = gain > 1.0 + cfg.improve_eps
-                if not rl.improved:
-                    if gain <= 1.0:
-                        stop = (f"winner did not beat baseline "
-                                f"(gain {gain:.4f}x)")
-                    else:
-                        stop = (f"round gain {gain:.4f}x below threshold "
-                                f"{1.0 + cfg.improve_eps:.4f}x")
-            rl.stop_reason = stop
-            res.rounds.append(rl)
-            if self.db:
-                self.db.append(
-                    "round", campaign=campaign_id, job=job.name,
-                    case=case.name, round=d,
-                    baseline_time_s=rl.baseline_time_s,
-                    best_time_s=rl.best_time_s, improved=rl.improved,
-                    stop_reason=stop,
-                    candidates=[{"variant": c.variant, "status": c.status,
-                                 "time_s": c.time_s, "cached": c.cached}
-                                for c in rl.candidates])
-            if stop:
-                res.mep_log.append(f"round {d}: stopped ({stop})")
-                res.stop_reason = stop
-                break
-        if not res.stop_reason:
-            res.stop_reason = f"d_rounds={cfg.d_rounds} exhausted"
-
-        res.best_variant, res.best_time_s = best_v, best_t
-        res.aer_records = len(aer.records)
-        res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
-        res.wall_s = time.time() - t_start
-        if self.patterns is not None:
-            self.patterns.record(case, self.platform.name, baseline_v,
-                                 best_v, res.speedup)
-        if self.db:
-            self.db.append("case_result", campaign=campaign_id,
-                           job=job.name, **res.to_dict())
-        if self.verbose:
-            print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
-                  f"{res.speedup:.2f}x over baseline, "
-                  f"{len(res.rounds)} rounds, {res.cache_hits} cache hits "
-                  f"[{res.stop_reason}]", flush=True)
-        return res

@@ -18,25 +18,52 @@ Two layers live here:
   of campaign_start / round / case_result / campaign_end records that
   survives restarts and backs the BENCH_* trajectory across PRs.
 
-Caveat for *measured* platforms (CPU wall-clock): a persisted timing
-replays the machine conditions under which it was taken, so a cache
-file reused across very different load conditions can mix stale and
-fresh measurements in one speedup ratio.  Analytic platforms are immune
-(timings are pure functions of the spec).  Delete the cache file — or
-run with ``--no-cache`` — when measured numbers must be all-fresh; see
-ROADMAP "Eval-cache invalidation" for the planned digest/namespace fix.
+Both are safe to share between *processes*, not just threads — the
+substrate the out-of-process worker fabric (``repro.core.workers``)
+runs on:
+
+* Every JSONL append is a single ``write()`` on an ``O_APPEND`` fd, so
+  concurrent writers never interleave partial lines.
+* A cache miss takes a per-key advisory file lock (``flock``) before
+  computing, re-reading the tail of the shared file first — so two
+  worker processes racing on the same key compute it exactly once
+  (the cross-process analogue of the in-thread pending-event dedup).
+
+Measured (wall-clock) entries additionally carry the cache's
+**namespace** — hostname + platform fingerprint — and are rejected on
+lookup when the namespace differs or the record is older than the
+staleness TTL (``REPRO_CACHE_TTL_S``): a persisted timing replays the
+machine conditions under which it was taken, so cross-host or long-stale
+wall-clock numbers must never be mixed into one speedup ratio.  Analytic
+platforms are immune (timings are pure functions of the spec) and their
+records are never expired.  Rejections are counted in the ``stale`` stat.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import socket
 import threading
 import time
 from dataclasses import asdict, dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
+try:                      # POSIX advisory locking; absent → thread-only dedup
+    import fcntl
+except ImportError:       # pragma: no cover - non-POSIX hosts
+    fcntl = None  # type: ignore[assignment]
+
 from repro.core.kernelcase import Variant
+
+
+def default_namespace() -> str:
+    """Identity of the measurement conditions: hostname + platform
+    fingerprint.  Wall-clock timings taken under a different namespace
+    are not comparable and must not replay from the shared cache."""
+    import platform as _pyplat
+    return (f"{socket.gethostname()}:{_pyplat.machine()}"
+            f":py{_pyplat.python_version()}:cpus={os.cpu_count()}")
 
 
 def canonical_spec(case_name: str, variant: Variant, scale: int,
@@ -73,6 +100,20 @@ def json_safe(obj: Any) -> Any:
     return obj
 
 
+def append_jsonl(path: str, rec: Dict[str, Any]) -> int:
+    """Append one record as a single ``write()`` on an ``O_APPEND`` fd.
+    POSIX guarantees the offset-advance+write is atomic per syscall, so
+    concurrent appenders — threads or *processes* — never interleave
+    partial lines.  Returns the number of bytes written."""
+    data = (json.dumps(rec, default=str) + "\n").encode()
+    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    try:
+        os.write(fd, data)
+    finally:
+        os.close(fd)
+    return len(data)
+
+
 @dataclass
 class EvalRecord:
     status: str = "ok"            # ok | build_error | fe_fail | run_error
@@ -84,6 +125,8 @@ class EvalRecord:
     key: str = ""
     spec: Dict[str, Any] = field(default_factory=dict)
     ts: float = 0.0
+    ns: str = ""                  # namespace the record was taken under
+    measured: bool = False        # wall-clock (True) vs analytic timing
 
     def to_dict(self) -> Dict[str, Any]:
         return json_safe(asdict(self))
@@ -92,55 +135,132 @@ class EvalRecord:
     def from_dict(d: Dict[str, Any]) -> "EvalRecord":
         rec = EvalRecord(**{k: d[k] for k in
                             ("status", "time_s", "fe_abs_err", "repairs",
-                             "error", "final_variant", "key", "spec", "ts")
+                             "error", "final_variant", "key", "spec", "ts",
+                             "ns", "measured")
                             if k in d})
         if rec.time_s is None:       # json_safe maps inf → None on disk
             rec.time_s = float("inf")
         return rec
 
 
-class EvalCache:
-    """Thread-safe content-addressed evaluation cache with optional JSONL
-    persistence.  Duplicate keys on disk resolve to the last record."""
+class _KeyFileLock:
+    """Advisory per-key lock file under ``<cache>.locks/``: the exclusive
+    holder computes; every other process blocks in ``__enter__`` and then
+    finds the published record on disk.  Lock files are never unlinked
+    (unlink+recreate races would let two holders coexist); they are
+    empty, bounded by the number of distinct keys, and reusable."""
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, locks_dir: str, key: str):
+        os.makedirs(locks_dir, exist_ok=True)
+        self.path = os.path.join(locks_dir, f"{key}.lock")
+        self.fd: Optional[int] = None
+
+    def __enter__(self) -> "_KeyFileLock":
+        self.fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+        fcntl.flock(self.fd, fcntl.LOCK_EX)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self.fd is not None:
+            fcntl.flock(self.fd, fcntl.LOCK_UN)
+            os.close(self.fd)
+            self.fd = None
+
+
+class EvalCache:
+    """Thread- and process-safe content-addressed evaluation cache with
+    optional JSONL persistence.  Duplicate keys resolve to the last
+    record."""
+
+    def __init__(self, path: Optional[str] = None, *,
+                 namespace: Optional[str] = None,
+                 ttl_s: Optional[float] = None):
         self.path = path
+        self.namespace = namespace if namespace is not None \
+            else default_namespace()
+        if ttl_s is None:
+            env = os.environ.get("REPRO_CACHE_TTL_S", "")
+            ttl_s = float(env) if env else None
+        self.ttl_s = ttl_s           # None → measured entries never expire
         self._lock = threading.Lock()
         self._records: Dict[str, EvalRecord] = {}
         self._pending: Dict[str, threading.Event] = {}
+        self._offset = 0             # how far into the file we have read
         self.hits = 0
         self.misses = 0
         self.waits = 0        # in-flight dedup: waited on another worker
+        self.stale = 0        # measured records rejected (namespace / TTL)
         if path and os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        rec = EvalRecord.from_dict(json.loads(line))
-                    except (ValueError, TypeError, KeyError):
-                        # a crash mid-append leaves a torn line; losing
-                        # one record must not lose the whole cache
-                        continue
-                    if rec.key:
-                        self._records[rec.key] = rec
+            with self._lock:
+                self._reload_locked()
+
+    # ------------------------------------------------------------------
+    def _reload_locked(self) -> None:
+        """Read records appended since the last load (our own or another
+        process's).  Caller holds self._lock.  A final line without a
+        trailing newline is a write still in flight — leave it for the
+        next reload rather than consuming a torn prefix."""
+        if not self.path or not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            f.seek(self._offset)
+            data = f.read()
+        if not data:
+            return
+        end = data.rfind(b"\n") + 1
+        if end == 0:
+            return                    # only an unfinished line so far
+        self._offset += end
+        for line in data[:end].splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = EvalRecord.from_dict(json.loads(line.decode()))
+            except (ValueError, TypeError, KeyError, UnicodeDecodeError):
+                # a crash mid-append leaves a torn line; losing one
+                # record must not lose the whole cache
+                continue
+            if rec.key:
+                self._records[rec.key] = rec
+
+    def _fresh_locked(self, key: str) -> Optional[EvalRecord]:
+        """The record for ``key`` unless it is a stale measured entry
+        (different namespace, or past the TTL).  Measured-ness is the
+        ``measured`` flag stamped at publish time (the evaluator sets it
+        for wall-clock platforms).  Caller holds _lock."""
+        rec = self._records.get(key)
+        if rec is None:
+            return None
+        if rec.measured:
+            if rec.ns and self.namespace and rec.ns != self.namespace:
+                self.stale += 1
+                return None
+            if self.ttl_s is not None and rec.ts \
+                    and time.time() - rec.ts > self.ttl_s:
+                self.stale += 1
+                return None
+        return rec
 
     # ------------------------------------------------------------------
     def lookup(self, spec: Dict[str, Any]) -> Optional[EvalRecord]:
         with self._lock:
-            return self._records.get(spec_key(spec))
+            return self._fresh_locked(spec_key(spec))
 
     def get_or_compute(self, spec: Dict[str, Any],
-                       compute: Callable[[], EvalRecord]
+                       compute: Callable[[], EvalRecord], *,
+                       measured: bool = False
                        ) -> Tuple[EvalRecord, bool]:
-        """Return ``(record, was_hit)``.  If another worker is already
-        computing the same key, wait for its result instead of
-        recomputing (no variant is evaluated twice, even concurrently)."""
+        """Return ``(record, was_hit)``.  If another worker — a thread of
+        this process or, when the cache is file-backed, *any process
+        sharing the file* — is already computing the same key, wait for
+        its result instead of recomputing.  ``measured=True`` marks the
+        record as a wall-clock timing subject to namespace/TTL staleness
+        checks on later lookups."""
         key = spec_key(spec)
         while True:
             with self._lock:
-                rec = self._records.get(key)
+                rec = self._fresh_locked(key)
                 if rec is not None:
                     self.hits += 1
                     return rec, True
@@ -152,42 +272,74 @@ class EvalCache:
                 self.waits += 1
             ev.wait()
         try:
-            rec = compute()
-            rec.key, rec.spec, rec.ts = key, spec, time.time()
-            with self._lock:
-                self._records[key] = rec
-                self.misses += 1
-                self._append(rec)
-            return rec, False
+            if self.path and fcntl is not None:
+                with _KeyFileLock(f"{self.path}.locks", key):
+                    # another process may have published while we waited
+                    # for the lock (or before we ever looked): re-read
+                    # the shared file's tail before paying the compute
+                    with self._lock:
+                        self._reload_locked()
+                        rec = self._fresh_locked(key)
+                        if rec is not None:
+                            self.hits += 1
+                            self.waits += 1
+                            return rec, True
+                    return self._compute_and_publish(
+                        key, spec, compute, measured), False
+            return self._compute_and_publish(key, spec, compute,
+                                             measured), False
         finally:
             with self._lock:
                 self._pending.pop(key, None)
             ev.set()
 
+    def _compute_and_publish(self, key: str, spec: Dict[str, Any],
+                             compute: Callable[[], EvalRecord],
+                             measured: bool) -> EvalRecord:
+        rec = compute()
+        rec.key, rec.spec, rec.ts = key, spec, time.time()
+        rec.ns = self.namespace
+        rec.measured = measured
+        with self._lock:
+            self._records[key] = rec
+            self.misses += 1
+            self._append_locked(rec)
+        return rec
+
+    def reload(self) -> None:
+        """Fold records appended by other processes (the worker fabric)
+        into this process's in-memory view."""
+        with self._lock:
+            self._reload_locked()
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
-                    "waits": self.waits, "entries": len(self._records)}
+                    "waits": self.waits, "stale": self.stale,
+                    "entries": len(self._records)}
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._records)
 
     # ------------------------------------------------------------------
-    def _append(self, rec: EvalRecord) -> None:
+    def _append_locked(self, rec: EvalRecord) -> None:
         # caller holds self._lock
         if not self.path:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        with open(self.path, "a") as f:
-            f.write(json.dumps(rec.to_dict(), default=str) + "\n")
+        append_jsonl(self.path, rec.to_dict())
 
 
 class ResultsDB:
     """Append-only JSONL journal of campaign progress.  Each line is a
-    self-describing record: {"kind": ..., "ts": ..., **fields}."""
+    self-describing record: {"kind": ..., "ts": ..., **fields}.
+
+    Safe for concurrent writers across threads *and processes*: every
+    ``append`` is one O_APPEND ``write()`` syscall, so records from the
+    out-of-process worker fabric land whole, never interleaved."""
 
     def __init__(self, path: str):
         self.path = path
@@ -199,8 +351,7 @@ class ResultsDB:
     def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
         rec = json_safe({"kind": kind, "ts": time.time(), **fields})
         with self._lock:
-            with open(self.path, "a") as f:
-                f.write(json.dumps(rec, default=str) + "\n")
+            append_jsonl(self.path, rec)
         return rec
 
     def records(self, kind: Optional[str] = None) -> Iterator[Dict[str, Any]]:

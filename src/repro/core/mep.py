@@ -35,6 +35,14 @@ class MEPConstraints:
     r: int = 30                  # repeated runs (paper: R=30)
     k: int = 3                   # trim count  (paper: k=3)
 
+    def to_dict(self) -> Dict[str, Any]:
+        from dataclasses import asdict
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "MEPConstraints":
+        return MEPConstraints(**d)
+
 
 @dataclass
 class MEP:

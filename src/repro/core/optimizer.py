@@ -18,7 +18,7 @@ so existing callers and tests are unaffected.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.core.aer import AER
@@ -42,6 +42,18 @@ class OptConfig:
     fe_scale: Optional[int] = None   # None → MEP scale
     check_pallas: bool = False       # also interpret-check the Pallas build
 
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "OptConfig":
+        return OptConfig(**d)
+
+
+def _de_none(t: Optional[float]) -> float:
+    """json_safe writes inf as None; restore it on the way back in."""
+    return float("inf") if t is None else t
+
 
 @dataclass
 class CandidateLog:
@@ -53,6 +65,15 @@ class CandidateLog:
     error: str = ""
     cached: bool = False         # served from the shared EvalCache
 
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "CandidateLog":
+        d = dict(d)
+        d["time_s"] = _de_none(d.get("time_s", float("inf")))
+        return CandidateLog(**d)
+
 
 @dataclass
 class RoundLog:
@@ -62,6 +83,17 @@ class RoundLog:
     best_time_s: float = float("inf")
     improved: bool = False
     stop_reason: str = ""        # non-empty → the loop stopped after this round
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "RoundLog":
+        d = dict(d)
+        d["candidates"] = [CandidateLog.from_dict(c)
+                           for c in d.get("candidates", [])]
+        d["best_time_s"] = _de_none(d.get("best_time_s", float("inf")))
+        return RoundLog(**d)
 
 
 @dataclass
@@ -85,8 +117,11 @@ class OptResult:
     def speedup(self) -> float:
         return self.baseline_time_s / self.best_time_s if self.best_time_s else 0.0
 
-    def to_dict(self) -> Dict[str, Any]:
-        return {
+    def to_dict(self, *, full: bool = False) -> Dict[str, Any]:
+        """Summary record for journals (default), or — with ``full`` — the
+        complete wire form an out-of-process worker ships back to the
+        scheduler (``from_dict`` restores it losslessly)."""
+        d = {
             "case": self.case_name, "platform": self.platform,
             "proposer": self.proposer, "speedup": self.speedup,
             "baseline_time_s": self.baseline_time_s,
@@ -96,6 +131,30 @@ class OptResult:
             "wall_s": self.wall_s, "stop_reason": self.stop_reason,
             "cache_hits": self.cache_hits, "cache_misses": self.cache_misses,
         }
+        if full:
+            d["baseline_variant"] = self.baseline_variant
+            d["rounds"] = [r.to_dict() for r in self.rounds]
+            d["mep_log"] = list(self.mep_log)
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "OptResult":
+        """Inverse of ``to_dict(full=True)``."""
+        res = OptResult(
+            case_name=d["case"], platform=d["platform"],
+            proposer=d["proposer"],
+            baseline_variant=dict(d["baseline_variant"]),
+            baseline_time_s=_de_none(d["baseline_time_s"]),
+            best_variant=dict(d["best_variant"]),
+            best_time_s=_de_none(d["best_time_s"]),
+            rounds=[RoundLog.from_dict(r) for r in d.get("rounds", [])],
+            mep_log=list(d.get("mep_log", [])),
+            aer_records=int(d.get("aer_records", 0)),
+            wall_s=float(d.get("wall_s", 0.0)),
+            stop_reason=d.get("stop_reason", ""),
+            cache_hits=int(d.get("cache_hits", 0)),
+            cache_misses=int(d.get("cache_misses", 0)))
+        return res
 
 
 class Evaluator:
@@ -107,7 +166,8 @@ class Evaluator:
 
     def __init__(self, mep: MEP, case: KernelCase, platform_name: str,
                  aer: AER, proposer: Proposer, cfg: OptConfig,
-                 cache: Optional[EvalCache] = None):
+                 cache: Optional[EvalCache] = None,
+                 measured: bool = False):
         self.mep = mep
         self.case = case
         self.platform_name = platform_name
@@ -115,6 +175,8 @@ class Evaluator:
         self.proposer = proposer
         self.cfg = cfg
         self.cache = cache
+        # wall-clock platforms → cached records are namespace/TTL-guarded
+        self.measured = measured
         self.hits = 0
         self.misses = 0
 
@@ -132,7 +194,8 @@ class Evaluator:
                               final_variant=dict(variant))
 
         rec, hit = self.cache.get_or_compute(self._spec(variant, "measure"),
-                                             compute)
+                                             compute,
+                                             measured=self.measured)
         self._count(hit)
         return rec.time_s
 
@@ -147,7 +210,8 @@ class Evaluator:
                               error=cl.error, final_variant=dict(cl.variant))
 
         rec, hit = self.cache.get_or_compute(self._spec(variant, "eval"),
-                                             compute)
+                                             compute,
+                                             measured=self.measured)
         self._count(hit)
         return CandidateLog(dict(rec.final_variant), rec.status, rec.time_s,
                             fe_abs_err=rec.fe_abs_err, repairs=rec.repairs,

@@ -98,6 +98,29 @@ class _LRUCache:
             return key in self._od
 
 
+# name → zero-arg factory; lets an out-of-process worker reconstruct the
+# scheduler's platform from the name string in an eval spec
+_PLATFORM_FACTORIES: Dict[str, Callable[[], "Platform"]] = {}
+
+
+def register_platform(name: str,
+                      factory: Callable[[], "Platform"]) -> None:
+    """Register a platform factory under ``name`` so eval specs can refer
+    to platforms by string (workers call ``platform_from_name``).
+    Re-registering a name replaces the factory (tests, custom tunings)."""
+    _PLATFORM_FACTORIES[name] = factory
+
+
+def platform_from_name(name: str) -> "Platform":
+    """Reconstruct a platform from its spec string (wire form)."""
+    try:
+        factory = _PLATFORM_FACTORIES[name]
+    except KeyError:
+        raise KeyError(f"unknown platform {name!r}; registered: "
+                       f"{sorted(_PLATFORM_FACTORIES)}") from None
+    return factory()
+
+
 class Platform:
     name: str = "abstract"
     # True → timing is analytic/deterministic, so a campaign may evaluate
@@ -191,6 +214,10 @@ class TPUModelPlatform(Platform):
         fb["latency_s"] = lat
         fb["latency_fraction"] = lat / max(lat + roof, 1e-12)
         return fb
+
+
+register_platform(CPUPlatform.name, CPUPlatform)
+register_platform(TPUModelPlatform.name, TPUModelPlatform)
 
 
 def variant_mxu_utilization(variant: Variant) -> float:

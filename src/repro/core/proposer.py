@@ -24,9 +24,11 @@ import itertools
 import json
 import os
 import random
+import threading
+import time
 import urllib.request
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.kernelcase import KernelCase, Variant
 from repro.core.patterns import PatternStore
@@ -59,6 +61,31 @@ class Proposer:
                ) -> Optional[Variant]:
         return None   # default: defer to the AER rule set
 
+    def to_spec(self) -> Dict[str, Any]:
+        """Wire form: enough for a worker process to rebuild an equivalent
+        proposer via ``proposer_from_spec``.  Stateful custom proposers
+        (tests, notebooks) don't serialize — they raise here, which the
+        subprocess executors surface before spawning anything."""
+        raise TypeError(
+            f"proposer {type(self).__name__!r} is not wire-safe; "
+            f"out-of-process executors need heuristic/direct/llm (or a "
+            f"proposer that overrides to_spec)")
+
+
+def proposer_from_spec(spec: Dict[str, Any], *,
+                       patterns: Optional[PatternStore] = None
+                       ) -> "Proposer":
+    """Rebuild a proposer from its wire form (inverse of ``to_spec``)."""
+    kind = spec["kind"]
+    if kind == "heuristic":
+        return HeuristicProposer(int(spec.get("seed", 0)), patterns,
+                                 spec.get("platform", "cpu"))
+    if kind == "direct":
+        return DirectProposer()
+    if kind == "llm":
+        return LLMProposer(patterns, spec.get("platform", "cpu"))
+    raise ValueError(f"unknown proposer kind {kind!r}")
+
 
 def _valid(case: KernelCase, v: Variant) -> bool:
     return variant_vmem_bytes(v) <= VMEM_BYTES
@@ -69,9 +96,14 @@ class HeuristicProposer(Proposer):
 
     def __init__(self, seed: int = 0, patterns: Optional[PatternStore] = None,
                  platform: str = "cpu"):
+        self.seed = seed
         self.rng = random.Random(seed)
         self.patterns = patterns
         self.platform = platform
+
+    def to_spec(self):
+        return {"kind": self.name, "seed": self.seed,
+                "platform": self.platform}
 
     # -- the "LLM" ---------------------------------------------------------
     def propose(self, case, state, n):
@@ -164,6 +196,9 @@ class DirectProposer(Proposer):
     built from best practices, no performance feedback, no iteration."""
     name = "direct"
 
+    def to_spec(self):
+        return {"kind": self.name}
+
     def propose(self, case, state, n):
         v = dict(state.baseline_variant)
         for key, best in (("block_m", 128), ("block_n", 128),
@@ -177,6 +212,139 @@ class DirectProposer(Proposer):
 
 class OfflineError(RuntimeError):
     pass
+
+
+def chat_completion(prompt: str, *, endpoint: Optional[str], model: str,
+                    api_key: str = "", timeout_s: float = 60.0) -> str:
+    """One OpenAI-compatible /chat/completions call (the only transport
+    both ``LLMProposer`` and ``LLMBatcher`` use)."""
+    if not endpoint:
+        raise OfflineError(
+            "LLMProposer needs REPRO_LLM_ENDPOINT; offline runs use "
+            "HeuristicProposer (see DESIGN.md §7)")
+    body = json.dumps({
+        "model": model,
+        "messages": [{"role": "user", "content": prompt}],
+    }).encode()
+    req = urllib.request.Request(
+        endpoint, data=body,
+        headers={"Content-Type": "application/json",
+                 "Authorization": f"Bearer {api_key}"})
+    with urllib.request.urlopen(req, timeout=timeout_s) as r:
+        data = json.load(r)
+    return data["choices"][0]["message"]["content"]
+
+
+class LLMBatcher:
+    """Coalesces round prompts from concurrent campaign cases into one
+    endpoint call (ROADMAP "LLM proposer in campaigns").
+
+    Each case's proposer calls ``submit(prompt)`` from its own worker
+    thread; the batcher holds the prompt until either every *active*
+    participant of the current round has one pending (or ``max_batch`` is
+    reached), or ``linger_s`` elapses — then ONE request carrying all
+    pending prompts as tagged sections goes to the endpoint, and the
+    per-tag answers are handed back to the blocked submitters.  Campaign
+    workers ``register()`` on job start and ``unregister()`` on job end,
+    so the dispatch threshold tracks how many cases can still contribute
+    a prompt — the last live case never waits out the linger timer.
+
+    In-process executors share one batcher across their worker threads;
+    subprocess workers each run their own campaign slice, so coalescing
+    is per-process there (documented in README "Distributed campaigns").
+    """
+
+    HEADER = ("You are optimizing {n} independent TPU kernels. Each "
+              "section below is one kernel's request, tagged `### id`. "
+              "Answer ALL of them in ONE strict-JSON object mapping each "
+              "id to that section's answer (for proposal sections: the "
+              "JSON list of variant dicts).\n")
+
+    def __init__(self, transport: Optional[Callable[[str], str]] = None, *,
+                 max_batch: int = 8, linger_s: float = 0.05,
+                 timeout_s: float = 60.0):
+        self._transport = transport or (lambda prompt: chat_completion(
+            prompt, endpoint=os.environ.get("REPRO_LLM_ENDPOINT"),
+            model=os.environ.get("REPRO_LLM_MODEL", "o3"),
+            api_key=os.environ.get("REPRO_LLM_API_KEY", ""),
+            timeout_s=timeout_s))
+        self.max_batch = max(1, max_batch)
+        self.linger_s = linger_s
+        self.calls = 0               # endpoint calls actually issued
+        self.coalesced = 0           # prompts answered by those calls
+        self._cv = threading.Condition()
+        self._active = 0             # registered participants still running
+        self._seq = 0
+        self._pending: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------------
+    def register(self) -> None:
+        with self._cv:
+            self._active += 1
+
+    def unregister(self) -> None:
+        with self._cv:
+            self._active = max(0, self._active - 1)
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    def _target(self) -> int:
+        return min(max(self._active, 1), self.max_batch)
+
+    def submit(self, prompt: str) -> str:
+        """Block until this prompt's answer arrives (with the batch it
+        was coalesced into); returns the answer text for this prompt."""
+        with self._cv:
+            item = {"id": f"k{self._seq}", "prompt": prompt,
+                    "done": False, "text": None, "err": None}
+            self._seq += 1
+            self._pending.append(item)
+            self._cv.notify_all()
+            deadline = time.monotonic() + self.linger_s
+            while not item["done"]:
+                leader = self._pending and self._pending[0] is item
+                if leader and (len(self._pending) >= self._target()
+                               or time.monotonic() >= deadline):
+                    batch = self._pending
+                    self._pending = []
+                    self._dispatch(batch)      # releases _cv during I/O
+                    self._cv.notify_all()
+                    continue
+                timeout = max(0.0, deadline - time.monotonic()) \
+                    if leader else None
+                self._cv.wait(timeout=timeout if leader else 0.25)
+            if item["err"] is not None:
+                raise item["err"]
+            return item["text"]
+
+    def _dispatch(self, batch: List[Dict[str, Any]]) -> None:
+        # caller holds _cv; drop it across the network round-trip
+        self._cv.release()
+        try:
+            try:
+                if len(batch) == 1:
+                    answers = {batch[0]["id"]: self._transport(
+                        batch[0]["prompt"])}
+                else:
+                    prompt = self.HEADER.format(n=len(batch)) + "".join(
+                        f"\n### {it['id']}\n{it['prompt']}\n"
+                        for it in batch)
+                    text = self._transport(prompt)
+                    obj = json.loads(text[text.find("{"):
+                                          text.rfind("}") + 1])
+                    answers = {it["id"]: json.dumps(obj[it["id"]])
+                               for it in batch}
+                self.calls += 1
+                self.coalesced += len(batch)
+                err = None
+            except Exception as e:  # noqa: BLE001 — fail the whole batch
+                answers, err = {}, e
+        finally:
+            self._cv.acquire()
+        for it in batch:
+            it["text"] = answers.get(it["id"])
+            it["err"] = err if it["text"] is None else None
+            it["done"] = True
 
 
 class LLMProposer(Proposer):
@@ -193,30 +361,30 @@ Recent errors: {errors}.
 Reply with a JSON list of up to {n} variant dicts drawn from the space."""
 
     def __init__(self, patterns: Optional[PatternStore] = None,
-                 platform: str = "cpu", timeout_s: float = 60.0):
+                 platform: str = "cpu", timeout_s: float = 60.0,
+                 batcher: Optional[LLMBatcher] = None):
         self.endpoint = os.environ.get("REPRO_LLM_ENDPOINT")
         self.model = os.environ.get("REPRO_LLM_MODEL", "o3")
         self.api_key = os.environ.get("REPRO_LLM_API_KEY", "")
         self.patterns = patterns
         self.platform = platform
         self.timeout_s = timeout_s
+        # attached by the campaign executor so concurrent cases' round
+        # prompts coalesce into one endpoint call
+        self.batcher = batcher
+
+    def to_spec(self):
+        return {"kind": self.name, "platform": self.platform}
 
     def _chat(self, prompt: str) -> str:
-        if not self.endpoint:
-            raise OfflineError(
-                "LLMProposer needs REPRO_LLM_ENDPOINT; offline runs use "
-                "HeuristicProposer (see DESIGN.md §7)")
-        body = json.dumps({
-            "model": self.model,
-            "messages": [{"role": "user", "content": prompt}],
-        }).encode()
-        req = urllib.request.Request(
-            self.endpoint, data=body,
-            headers={"Content-Type": "application/json",
-                     "Authorization": f"Bearer {self.api_key}"})
-        with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
-            data = json.load(r)
-        return data["choices"][0]["message"]["content"]
+        return chat_completion(prompt, endpoint=self.endpoint,
+                               model=self.model, api_key=self.api_key,
+                               timeout_s=self.timeout_s)
+
+    def _round_text(self, prompt: str) -> str:
+        if self.batcher is not None:
+            return self.batcher.submit(prompt)
+        return self._chat(prompt)
 
     def propose(self, case, state, n):
         hints = (self.patterns.suggest(case, self.platform)
@@ -226,7 +394,7 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
             variant=state.baseline_variant, space=case.variant_space,
             feedback=state.feedback, hints=hints,
             errors=state.errors[-3:], n=n)
-        text = self._chat(prompt)
+        text = self._round_text(prompt)
         start, end = text.find("["), text.rfind("]")
         cands = json.loads(text[start:end + 1])
         out = []

@@ -1,0 +1,751 @@
+"""Out-of-process evaluation fabric: transport-agnostic campaign workers.
+
+The paper's premise is that MEPs make kernel evaluation cheap and
+independent of the full application; this module makes it independent of
+the *scheduler's process* too.  A campaign hands its ``CaseJob``s to an
+``Executor`` and never touches an MEP directly:
+
+* ``InProcessExecutor``   — today's bounded thread pool (default).  MEPs
+  are deduped per (case, platform, seed, constraints, scale) so jobs on
+  the same case share input generation and scale probing.
+* ``SubprocessExecutor``  — one MEP per worker *process*.  Jobs travel
+  as serialized eval specs (``job_to_spec``) over a line-JSON pipe to
+  ``scripts/worker_main.py`` workers; results come back as full
+  ``OptResult`` wire dicts.  The shared ``EvalCache`` JSONL (advisory
+  file locks + namespace) and ``ResultsDB`` journal (atomic O_APPEND
+  lines) are the only shared state, so the same code path scales to
+  remote hosts over shared storage.
+* ``LocalClusterExecutor`` — multiplexes N persistent subprocess workers
+  with per-worker platform pinning: measured (wall-clock) platforms get
+  one *exclusive* worker each (parallel timing would corrupt the paper's
+  eq. 3 trimmed mean), while analytic platforms fan out over the general
+  pool.  Workers persist across campaigns, amortizing spawn cost for the
+  serving autotuner's repeated cycles.
+
+Process-level crashes and timeouts are folded into the AER taxonomy as
+``WorkerFault`` (kind crash|timeout) with automatic worker replacement:
+the dead worker is respawned and the job retried on the fresh process;
+only a job that exhausts its retry budget surfaces the fault, which the
+campaign records like any other job failure.
+
+The LLM proposer's round prompts are coalesced across the concurrent
+cases of an in-process campaign through a shared ``LLMBatcher`` (one
+endpoint call per round wave); subprocess workers each coalesce within
+their own process only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import select
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from queue import Queue
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.aer import AER, WorkerFault
+from repro.core.evalcache import EvalCache, ResultsDB, json_safe
+from repro.core.kernelcase import KernelCase
+from repro.core.mep import MEP, MEPConstraints, build_mep
+from repro.core.optimizer import Evaluator, OptConfig, OptResult, RoundLog
+from repro.core.patterns import PatternStore
+from repro.core.profiler import Platform, platform_from_name
+from repro.core.proposer import (LLMBatcher, LLMProposer, Proposer,
+                                 RoundState, proposer_from_spec)
+
+
+@dataclass
+class CaseJob:
+    """One unit of campaign work: optimize ``case`` with ``proposer``."""
+    case: KernelCase
+    proposer: Proposer
+    cfg: OptConfig = OptConfig()
+    constraints: MEPConstraints = MEPConstraints()
+    seed: int = 0
+    mep: Optional[MEP] = None       # pre-built MEP (else built & shared)
+    label: str = ""                 # distinguishes jobs on the same case
+
+    @property
+    def name(self) -> str:
+        return self.label or self.case.name
+
+
+@dataclass
+class WorkerContext:
+    """Everything an executor needs beside the jobs themselves — the
+    scheduler-owned shared state.  Executors must reach MEPs only
+    through ``run_case_job``; the scheduler never builds one."""
+    platform: Platform
+    cache: Optional[EvalCache] = None
+    patterns: Optional[PatternStore] = None
+    db: Optional[ResultsDB] = None
+    verbose: bool = False
+
+
+# ---------------------------------------------------------------------------
+# the paper's §3.2 search loop for ONE kernel — the unit every executor
+# runs, in a pool thread (in-process) or a worker process (subprocess)
+# ---------------------------------------------------------------------------
+def run_case_job(job: CaseJob, platform: Platform, *,
+                 campaign_id: str = "",
+                 cache: Optional[EvalCache] = None,
+                 patterns: Optional[PatternStore] = None,
+                 db: Optional[ResultsDB] = None,
+                 stop_event: Optional[threading.Event] = None,
+                 verbose: bool = False,
+                 mep: Optional[MEP] = None,
+                 scale: Optional[int] = None) -> OptResult:
+    """Round loop (eq. 5): propose → evaluate (build→FE→time, AER-wrapped,
+    cache-served) → argmin, with the uniform early stop.  Serial per
+    case; concurrency happens across cases, in whichever executor."""
+    t_start = time.time()
+    case, proposer, cfg = job.case, job.proposer, job.cfg
+    if mep is None:
+        mep = job.mep or build_mep(case, platform,
+                                   constraints=job.constraints,
+                                   seed=job.seed, scale=scale)
+    aer = AER(case, mep.scale)
+    evaluator = Evaluator(mep, case, platform.name, aer, proposer,
+                          cfg, cache=cache,
+                          measured=not getattr(platform,
+                                               "concurrency_safe", False))
+
+    baseline_v = dict(case.baseline_variant)
+    t_base = evaluator.measure_baseline(baseline_v)
+    best_v, best_t = baseline_v, t_base
+    res = OptResult(case.name, platform.name, proposer.name,
+                    baseline_v, t_base, best_v, best_t,
+                    mep_log=list(mep.log))
+
+    history: List[Dict[str, Any]] = []
+    errors: List[str] = []
+    for d in range(cfg.d_rounds):
+        if stop_event is not None and stop_event.is_set():
+            res.stop_reason = "stop requested"
+            res.mep_log.append(f"round {d}: stopped (stop requested)")
+            break
+        state = RoundState(
+            round=d, baseline_variant=best_v, baseline_time_s=best_t,
+            feedback=platform.profile_feedback(case, best_v, mep.scale),
+            history=history, errors=errors)
+        cands = proposer.propose(case, state, cfg.n_candidates)
+        rl = RoundLog(round=d, baseline_time_s=best_t)
+        for v in cands:
+            cl = evaluator.evaluate(v)
+            rl.candidates.append(cl)
+            history.append({"variant": cl.variant, "time_s": cl.time_s,
+                            "status": cl.status})
+            if cl.status != "ok":
+                errors.append(cl.error)
+        feasible = [c for c in rl.candidates if c.status == "ok"]
+        # eq. 5 argmin + uniform early stop: ANY round (round 0
+        # included) that fails to improve by > eps ends the loop,
+        # with the reason logged.
+        stop = ""
+        if not feasible:
+            stop = "no feasible candidates"
+        else:
+            winner = min(feasible, key=lambda c: c.time_s)
+            rl.best_time_s = winner.time_s
+            gain = best_t / winner.time_s if winner.time_s else float("inf")
+            if winner.time_s < best_t:
+                best_v, best_t = winner.variant, winner.time_s
+            rl.improved = gain > 1.0 + cfg.improve_eps
+            if not rl.improved:
+                if gain <= 1.0:
+                    stop = (f"winner did not beat baseline "
+                            f"(gain {gain:.4f}x)")
+                else:
+                    stop = (f"round gain {gain:.4f}x below threshold "
+                            f"{1.0 + cfg.improve_eps:.4f}x")
+        rl.stop_reason = stop
+        res.rounds.append(rl)
+        if db:
+            db.append(
+                "round", campaign=campaign_id, job=job.name,
+                case=case.name, round=d,
+                baseline_time_s=rl.baseline_time_s,
+                best_time_s=rl.best_time_s, improved=rl.improved,
+                stop_reason=stop,
+                candidates=[{"variant": c.variant, "status": c.status,
+                             "time_s": c.time_s, "cached": c.cached}
+                            for c in rl.candidates])
+        if stop:
+            res.mep_log.append(f"round {d}: stopped ({stop})")
+            res.stop_reason = stop
+            break
+    if not res.stop_reason:
+        res.stop_reason = f"d_rounds={cfg.d_rounds} exhausted"
+
+    res.best_variant, res.best_time_s = best_v, best_t
+    res.aer_records = len(aer.records)
+    res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
+    res.wall_s = time.time() - t_start
+    if patterns is not None:
+        patterns.record(case, platform.name, baseline_v, best_v,
+                        res.speedup)
+    if db:
+        db.append("case_result", campaign=campaign_id,
+                  job=job.name, **res.to_dict())
+    if verbose:
+        print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
+              f"{res.speedup:.2f}x over baseline, "
+              f"{len(res.rounds)} rounds, {res.cache_hits} cache hits "
+              f"[{res.stop_reason}]", flush=True)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# wire form
+# ---------------------------------------------------------------------------
+def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
+                ) -> Dict[str, Any]:
+    """Serialize one CaseJob + the shared-state coordinates into the eval
+    spec a worker process consumes.  Raises TypeError/ValueError up
+    front for anything that cannot cross the process boundary."""
+    if ctx.cache is not None and not ctx.cache.path:
+        raise ValueError(
+            "subprocess executors need a file-backed EvalCache (or none): "
+            "an in-memory cache cannot be shared across processes")
+    return {
+        "job": {
+            "case": job.case.to_dict(),
+            "proposer": job.proposer.to_spec(),
+            "cfg": job.cfg.to_dict(),
+            "constraints": job.constraints.to_dict(),
+            "seed": job.seed,
+            "label": job.label,
+            # a pre-built MEP may be pinned to a non-default (observed
+            # traffic) scale; the worker rebuilds at the same pin
+            "scale": job.mep.scale if job.mep else None,
+        },
+        "platform": ctx.platform.name,
+        "cache": None if ctx.cache is None else {
+            "path": ctx.cache.path, "ns": ctx.cache.namespace,
+            "ttl_s": ctx.cache.ttl_s},
+        "db": ctx.db.path if ctx.db else None,
+        "campaign": campaign_id,
+        "verbose": ctx.verbose,
+        "stop": False,
+    }
+
+
+def job_from_spec(spec: Dict[str, Any]) -> Tuple[CaseJob, Optional[int]]:
+    """Worker-side inverse of ``job_to_spec`` (job part only); returns the
+    job plus the pinned MEP scale (None → auto-sized)."""
+    j = spec["job"]
+    job = CaseJob(
+        case=KernelCase.from_dict(j["case"]),
+        proposer=proposer_from_spec(j["proposer"]),
+        cfg=OptConfig.from_dict(j["cfg"]),
+        constraints=MEPConstraints.from_dict(j["constraints"]),
+        seed=int(j.get("seed", 0)),
+        label=j.get("label", ""))
+    scale = j.get("scale")
+    return job, (int(scale) if scale is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+class Executor:
+    """Transport-agnostic evaluation backend.  ``run`` maps jobs to
+    outcomes (``OptResult`` or the ``Exception`` that killed the job),
+    in job order; it must not raise for a single job's failure."""
+
+    name = "abstract"
+
+    def run(self, jobs: List[CaseJob], ctx: WorkerContext, *,
+            campaign_id: str = "",
+            stop: Optional[threading.Event] = None) -> List[Any]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release any long-lived resources (persistent workers)."""
+
+
+class InProcessExecutor(Executor):
+    """Bounded thread pool in the scheduler's process — the default, and
+    the reference semantics every other transport must match."""
+
+    name = "inprocess"
+
+    def __init__(self, max_workers: int = 4):
+        self.max_workers = max(1, max_workers)
+        self._mep_lock = threading.Lock()
+        self._mep_locks: Dict[Tuple, threading.Lock] = {}
+        self._meps: Dict[Tuple, MEP] = {}
+
+    # ------------------------------------------------------------------
+    def _get_mep(self, job: CaseJob, platform: Platform) -> MEP:
+        # a pre-built MEP may be pinned to a non-default (e.g. observed
+        # traffic) scale, so its scale is part of the dedup identity
+        key = (job.case.name, platform.name, job.seed, job.constraints,
+               job.mep.scale if job.mep else None)
+        with self._mep_lock:
+            lk = self._mep_locks.setdefault(key, threading.Lock())
+        with lk:
+            if key not in self._meps:
+                self._meps[key] = job.mep or build_mep(
+                    job.case, platform, constraints=job.constraints,
+                    seed=job.seed)
+            return self._meps[key]
+
+    def _attach_batcher(self, jobs: List[CaseJob]) -> Optional[LLMBatcher]:
+        """Coalesce LLM round prompts across the campaign's concurrent
+        cases: all LLM proposers without their own batcher share one."""
+        props = [j.proposer for j in jobs
+                 if isinstance(j.proposer, LLMProposer)
+                 and j.proposer.batcher is None]
+        if len(props) < 2 or self.max_workers < 2:
+            return None
+        batcher = LLMBatcher(max_batch=len(props))
+        for p in props:
+            p.batcher = batcher
+            batcher.register()
+        return batcher
+
+    def run(self, jobs, ctx, *, campaign_id="", stop=None):
+        from concurrent.futures import ThreadPoolExecutor
+        batcher = self._attach_batcher(jobs)
+
+        def guarded(job: CaseJob):
+            try:
+                mep = self._get_mep(job, ctx.platform)
+                return run_case_job(
+                    job, ctx.platform, campaign_id=campaign_id,
+                    cache=ctx.cache, patterns=ctx.patterns, db=ctx.db,
+                    stop_event=stop, verbose=ctx.verbose, mep=mep)
+            except Exception as e:  # noqa: BLE001 — isolate job failures
+                return e
+            finally:
+                if batcher is not None and \
+                        getattr(job.proposer, "batcher", None) is batcher:
+                    batcher.unregister()
+
+        if self.max_workers == 1 or len(jobs) == 1:
+            return [guarded(j) for j in jobs]
+        with ThreadPoolExecutor(self.max_workers) as ex:
+            return [f.result() for f in [ex.submit(guarded, j)
+                                         for j in jobs]]
+
+
+# ---------------------------------------------------------------------------
+class _WorkerProc:
+    """One worker subprocess + its pipe protocol.  stderr goes to a temp
+    file whose tail becomes the fault diagnostic on crash."""
+
+    def __init__(self, cmd: List[str], env: Dict[str, str], slot: int):
+        self.slot = slot
+        self.log = tempfile.NamedTemporaryFile(
+            mode="w+b", prefix=f"repro-worker{slot}-", suffix=".log",
+            delete=False)
+        self.proc = subprocess.Popen(
+            cmd, env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=self.log, text=True, bufsize=1)
+        self._buf = ""
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def send(self, spec: Dict[str, Any]) -> None:
+        self.proc.stdin.write(json.dumps(spec) + "\n")
+        self.proc.stdin.flush()
+
+    def recv(self, timeout_s: Optional[float]) -> Dict[str, Any]:
+        """Read one protocol line; raises TimeoutError / EOFError."""
+        deadline = None if timeout_s is None else \
+            time.monotonic() + timeout_s
+        fd = self.proc.stdout.fileno()
+        while True:
+            nl = self._buf.find("\n")
+            if nl >= 0:
+                line, self._buf = self._buf[:nl], self._buf[nl + 1:]
+                if line.strip():
+                    return json.loads(line)
+                continue
+            wait = None if deadline is None else deadline - time.monotonic()
+            if wait is not None and wait <= 0:
+                raise TimeoutError(f"no result within {timeout_s}s")
+            ready, _, _ = select.select([fd], [], [],
+                                        min(wait, 1.0) if wait else 1.0)
+            if not ready:
+                if not self.alive() and not self._buf:
+                    raise EOFError(self.diagnostic())
+                continue
+            chunk = os.read(fd, 65536).decode(errors="replace")
+            if not chunk:
+                raise EOFError(self.diagnostic())
+            self._buf += chunk
+
+    def diagnostic(self) -> str:
+        code = self.proc.poll()
+        tail = ""
+        try:
+            self.log.flush()
+            with open(self.log.name, "rb") as f:
+                f.seek(max(0, os.fstat(f.fileno()).st_size - 2000))
+                tail = f.read().decode(errors="replace").strip()
+        except OSError:
+            pass
+        return f"exit={code}" + (f"; stderr tail:\n{tail}" if tail else "")
+
+    def kill(self) -> None:
+        try:
+            if self.alive():
+                self.proc.kill()
+            self.proc.wait(timeout=5)
+        except (OSError, subprocess.TimeoutExpired):
+            pass
+        for h in (self.proc.stdin, self.proc.stdout, self.log):
+            try:
+                h.close()
+            except OSError:
+                pass
+        try:
+            os.unlink(self.log.name)
+        except OSError:
+            pass
+
+
+def _worker_cmd() -> List[str]:
+    """Spawn command for scripts/worker_main.py, falling back to an
+    inline import when the repo layout isn't present (installed use)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    script = os.path.abspath(os.path.join(here, "..", "..", "..",
+                                          "scripts", "worker_main.py"))
+    if os.path.exists(script):
+        return [sys.executable, "-u", script]
+    return [sys.executable, "-u", "-c",
+            "from repro.core.workers import worker_main; worker_main()"]
+
+
+def _worker_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+    parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                     if p and p != src]
+    env["PYTHONPATH"] = os.pathsep.join(parts)
+    return env
+
+
+class SubprocessExecutor(Executor):
+    """One MEP per worker process: N workers each pull serialized eval
+    specs off a queue, evaluate them in their own interpreter (their own
+    GIL, their own jit caches), and ship ``OptResult`` wire dicts back.
+    Crashes and timeouts become ``WorkerFault``s with automatic worker
+    replacement; the cache/journal files are the only shared state."""
+
+    name = "subprocess"
+    persistent = False        # workers live for one run() call
+
+    def __init__(self, workers: Optional[int] = None, *,
+                 timeout_s: Optional[float] = None, retries: int = 1):
+        # an explicit width is the caller's deliberate choice (mirrors
+        # Campaign(max_workers=...) overriding the measured clamp); a
+        # policy-derived width must still clamp measured platforms
+        self._explicit_width = workers is not None
+        if workers is None:
+            workers = int(os.environ.get(
+                "REPRO_CAMPAIGN_WORKERS", str(os.cpu_count() or 2)))
+        self.workers = max(1, workers)
+        if timeout_s is None:
+            env = os.environ.get("REPRO_WORKER_TIMEOUT_S", "")
+            timeout_s = float(env) if env else None
+        self.timeout_s = timeout_s
+        self.retries = max(0, retries)
+        from collections import deque
+        self.dispatch_log = deque(maxlen=4096)          # (job, slot)
+        self._procs: Dict[Any, _WorkerProc] = {}        # slot → process
+        self._slot_locks: Dict[Any, threading.Lock] = {}
+        self._lock = threading.Lock()
+
+    # -- overridable routing (LocalClusterExecutor pins measured slots) --
+    def _slots_for(self, ctx: WorkerContext, n_jobs: int) -> List[Any]:
+        if not getattr(ctx.platform, "concurrency_safe", False) \
+                and not self._explicit_width:
+            # measured wall-clock platform on a policy-sized fabric:
+            # concurrent timing would corrupt eq. 3's trimmed mean
+            return [0]
+        return list(range(min(self.workers, max(1, n_jobs))))
+
+    def _slot_lock(self, slot: Any) -> threading.Lock:
+        # one protocol exchange at a time per worker process, even when
+        # a persistent executor serves overlapping campaigns
+        with self._lock:
+            return self._slot_locks.setdefault(slot, threading.Lock())
+
+    def _inject(self, job: CaseJob, spec: Dict[str, Any]) -> None:
+        """Test-only fault injection hook: jobs may carry an ``inject``
+        attribute (set by tests) that the worker honors before
+        evaluating."""
+        inject = getattr(job, "inject", None)
+        if inject:
+            spec["inject"] = inject
+
+    def run(self, jobs, ctx, *, campaign_id="", stop=None):
+        # serialize everything first: a non-wire-safe job must fail the
+        # campaign before any process is spawned
+        specs = []
+        for job in jobs:
+            spec = job_to_spec(job, ctx, campaign_id)
+            self._inject(job, spec)
+            specs.append(spec)
+
+        if not jobs:
+            return []
+        outcomes: List[Any] = [None] * len(jobs)
+        slots = self._slots_for(ctx, len(jobs))
+        q: Queue = Queue()
+        for i, (job, spec) in enumerate(zip(jobs, specs)):
+            q.put((i, job, spec, 0))
+        remaining = [len(jobs)]
+
+        def finish(idx: int, outcome: Any) -> None:
+            outcomes[idx] = outcome
+            with self._lock:
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    for _ in slots:
+                        q.put(None)
+
+        def fault(idx, job, spec, attempt, kind, detail, slot):
+            """AER worker-fault handling: journal, replace the worker,
+            retry on the fresh one, surface WorkerFault when spent."""
+            if ctx.db:
+                try:
+                    ctx.db.append("worker_fault", campaign=campaign_id,
+                                  job=job.name, fault=kind,
+                                  attempt=attempt + 1, slot=str(slot),
+                                  detail=str(detail)[:500])
+                except OSError:
+                    pass     # a full disk must not turn a retry into a hang
+            if attempt < self.retries:
+                q.put((idx, job, spec, attempt + 1))
+            else:
+                finish(idx, WorkerFault(kind, job.name, str(detail)[:500],
+                                        attempts=attempt + 1))
+
+        def dispatch(slot, idx, job, spec, attempt) -> None:
+            if stop is not None and stop.is_set():
+                spec = dict(spec, stop=True)
+            self.dispatch_log.append((job.name, slot))
+            try:
+                with self._slot_lock(slot):
+                    worker = self._ensure_worker(slot, ctx)
+                    worker.send(spec)
+                    reply = worker.recv(self.timeout_s)
+            except TimeoutError as e:
+                self._replace_worker(slot)
+                fault(idx, job, spec, attempt, "timeout", e, slot)
+                return
+            except (EOFError, OSError, BrokenPipeError, ValueError) as e:
+                self._replace_worker(slot)
+                fault(idx, job, spec, attempt, "crash", e, slot)
+                return
+            if reply.get("ok"):
+                res = OptResult.from_dict(reply["result"])
+                if ctx.patterns is not None:
+                    # PPI recording stays scheduler-side: the JSON
+                    # pattern store is not multi-process safe
+                    ctx.patterns.record(job.case, ctx.platform.name,
+                                        res.baseline_variant,
+                                        res.best_variant, res.speedup)
+                finish(idx, res)
+            else:
+                finish(idx, RuntimeError(
+                    f"{reply.get('type', 'Error')}: "
+                    f"{reply.get('error', 'worker error')}"))
+
+        def slot_loop(slot: int) -> None:
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                idx, job, spec, attempt = item
+                try:
+                    dispatch(slot, idx, job, spec, attempt)
+                except Exception as e:  # noqa: BLE001 — a scheduler-side
+                    # error (bad reply shape, pattern-store I/O) must fail
+                    # THIS job, not strand the whole campaign in q.get()
+                    finish(idx, e)
+
+        threads = [threading.Thread(target=slot_loop, args=(s,),
+                                    name=f"exec-slot{s}", daemon=True)
+                   for s in slots]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if not self.persistent:
+            self.close()
+        if ctx.cache is not None:
+            ctx.cache.reload()       # fold workers' entries into our view
+        return outcomes
+
+    def warm(self, slots: Optional[List[Any]] = None,
+             timeout_s: float = 120.0) -> None:
+        """Pre-spawn the worker processes and wait until each answers a
+        protocol ping (interpreter + jax import done).  A persistent
+        fabric (LocalClusterExecutor, the serving autotuner) calls this
+        once so campaign wall-clock measures evaluation, not startup."""
+        for slot in (slots if slots is not None else range(self.workers)):
+            with self._slot_lock(slot):
+                w = self._ensure_worker(slot, None)
+                w.send({"ping": True})
+                w.recv(timeout_s)
+
+    # ------------------------------------------------------------------
+    def _ensure_worker(self, slot: int, ctx: Optional[WorkerContext]
+                       ) -> _WorkerProc:
+        with self._lock:
+            w = self._procs.get(slot)
+            if w is None or not w.alive():
+                w = _WorkerProc(_worker_cmd(), _worker_env(), slot)
+                self._procs[slot] = w
+            return w
+
+    def _replace_worker(self, slot: int) -> None:
+        with self._lock:
+            w = self._procs.pop(slot, None)
+        if w is not None:
+            w.kill()
+
+    def close(self) -> None:
+        with self._lock:
+            procs, self._procs = list(self._procs.values()), {}
+        for w in procs:
+            w.kill()
+
+    def __del__(self):  # best-effort cleanup for persistent executors
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
+
+
+class LocalClusterExecutor(SubprocessExecutor):
+    """N persistent subprocess workers with per-worker platform pinning:
+    a measured (wall-clock) platform is routed to ONE exclusive worker
+    slot — reserved for that platform name, jobs serialized on it, so
+    co-running evaluations can't pollute eq. 3 timing — while analytic
+    platforms fan out across the remaining general slots.  Workers stay
+    alive across ``run`` calls (campaign after campaign), so repeated
+    autotune cycles don't re-pay interpreter+jax startup."""
+
+    name = "local-cluster"
+    persistent = True
+
+    def _slots_for(self, ctx, n_jobs):
+        if getattr(ctx.platform, "concurrency_safe", False):
+            # analytic: fan out over the general (integer) slots
+            return list(range(min(self.workers, max(1, n_jobs))))
+        # measured: one exclusive worker, pinned to the platform name —
+        # a distinct slot namespace, so it never co-runs analytic jobs
+        return [f"pin:{ctx.platform.name}"]
+
+
+def make_executor(kind: Optional[str], *, workers: Optional[int] = None,
+                  timeout_s: Optional[float] = None) -> Executor:
+    """Executor factory behind the ``--executor=`` / ``executor=`` knobs
+    (None → REPRO_CAMPAIGN_EXECUTOR, default in-process)."""
+    if kind is None:
+        kind = os.environ.get("REPRO_CAMPAIGN_EXECUTOR", "inprocess")
+    kind = kind.replace("_", "-")
+    if kind in ("inprocess", "in-process", "thread"):
+        if workers is None:
+            workers = int(os.environ.get("REPRO_CAMPAIGN_WORKERS", "4"))
+        return InProcessExecutor(workers)
+    if kind == "subprocess":
+        return SubprocessExecutor(workers, timeout_s=timeout_s)
+    if kind in ("local-cluster", "cluster"):
+        return LocalClusterExecutor(workers, timeout_s=timeout_s)
+    raise ValueError(f"unknown executor {kind!r}; choose from "
+                     f"inprocess, subprocess, local-cluster")
+
+
+# ---------------------------------------------------------------------------
+# worker process entry point (spawned via scripts/worker_main.py)
+# ---------------------------------------------------------------------------
+def _apply_inject(inject: Dict[str, Any]) -> None:
+    """Test-only fault hooks (documented in tests/test_workers.py):
+    ``crash`` exits immediately; ``crash_once_flag`` crashes only if the
+    flag file is absent (creating it first, so the retried attempt on
+    the replacement worker succeeds); ``sleep_s`` stalls mid-eval to
+    exercise the timeout path."""
+    if inject.get("crash"):
+        os._exit(int(inject.get("exit_code", 41)))
+    flag = inject.get("crash_once_flag")
+    if flag:
+        if not os.path.exists(flag):
+            with open(flag, "w") as f:
+                f.write("crashed once\n")
+            os._exit(int(inject.get("exit_code", 42)))
+    if inject.get("sleep_s"):
+        time.sleep(float(inject["sleep_s"]))
+
+
+def worker_main() -> int:
+    """Line-JSON worker loop: read an eval spec, run the §3.2 search for
+    its job, write the full OptResult back.  One long-lived process
+    serves many jobs; platform/cache/db handles are cached per spec
+    coordinates."""
+    # The pipe to the scheduler is fd 1 at startup.  Everything else the
+    # worker (or jax) prints must go to stderr, so dup the protocol fd
+    # away and point stdout at stderr.
+    proto = os.fdopen(os.dup(1), "w", buffering=1)
+    os.dup2(2, 1)
+    sys.stdout = os.fdopen(1, "w", buffering=1)
+
+    platforms: Dict[str, Platform] = {}
+    caches: Dict[Tuple, EvalCache] = {}
+    dbs: Dict[str, ResultsDB] = {}
+
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            spec = json.loads(line)
+            if spec.get("ping"):
+                proto.write(json.dumps({"ok": True, "pong": True}) + "\n")
+                proto.flush()
+                continue
+            _apply_inject(spec.get("inject") or {})
+            job, scale = job_from_spec(spec)
+            pname = spec["platform"]
+            if pname not in platforms:
+                platforms[pname] = platform_from_name(pname)
+            platform = platforms[pname]
+            cache = None
+            if spec.get("cache"):
+                c = spec["cache"]
+                ck = (c["path"], c.get("ns"), c.get("ttl_s"))
+                if ck not in caches:
+                    caches[ck] = EvalCache(c["path"], namespace=c.get("ns"),
+                                           ttl_s=c.get("ttl_s"))
+                cache = caches[ck]
+            db = None
+            if spec.get("db"):
+                db = dbs.setdefault(spec["db"], ResultsDB(spec["db"]))
+            stop_event = threading.Event()
+            if spec.get("stop"):
+                stop_event.set()
+            res = run_case_job(
+                job, platform, campaign_id=spec.get("campaign", ""),
+                cache=cache, db=db, stop_event=stop_event,
+                verbose=spec.get("verbose", False), scale=scale)
+            reply = {"ok": True, "result": res.to_dict(full=True)}
+        except Exception as e:  # noqa: BLE001 — job errors go to scheduler
+            import traceback
+            reply = {"ok": False, "type": type(e).__name__,
+                     "error": f"{e}"[:1000],
+                     "traceback": traceback.format_exc()[-2000:]}
+        proto.write(json.dumps(json_safe(reply), default=str) + "\n")
+        proto.flush()
+    return 0

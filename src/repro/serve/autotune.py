@@ -31,6 +31,8 @@ is the synchronous building block, used directly by tests and benches.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
 from collections import deque
@@ -49,6 +51,7 @@ from repro.core.optimizer import OptConfig, OptResult
 from repro.core.patterns import PatternStore
 from repro.core.profiler import Platform
 from repro.core.proposer import HeuristicProposer, Proposer
+from repro.core.workers import make_executor
 from repro.kernels import ops
 
 
@@ -68,6 +71,11 @@ class AutotuneConfig:
     probe_k: int = 0
     install: bool = True           # False = observe-and-campaign dry run
     seed: int = 0
+    # evaluation fabric: None → in-process policy default; "subprocess" /
+    # "local-cluster" move MEP evaluation out of the serving process so
+    # background campaigns never contend with request threads for the GIL
+    executor: Optional[str] = None
+    workers: Optional[int] = None  # fabric width (None → env/policy)
 
 
 def snap_scale(case: KernelCase, observed: int) -> int:
@@ -123,7 +131,18 @@ class ServeAutotuner:
                  verbose: bool = False):
         self.platform = platform
         self.config = config or AutotuneConfig()
-        self.cache = cache if cache is not None else EvalCache()
+        if cache is None:
+            # an out-of-process fabric shares the cache as a file; the
+            # in-memory default would be rejected by job_to_spec
+            if self.config.executor and \
+                    self.config.executor not in ("inprocess", "in-process",
+                                                 "thread"):
+                cache = EvalCache(os.path.join(
+                    tempfile.gettempdir(),
+                    f"repro-autotune-cache-{os.getpid()}.jsonl"))
+            else:
+                cache = EvalCache()
+        self.cache = cache
         self.db = db
         self.patterns = patterns
         self.telemetry = telemetry if telemetry is not None else ops.telemetry
@@ -139,6 +158,12 @@ class ServeAutotuner:
         self.reports: Deque[AutotuneReport] = deque(maxlen=self.REPORTS_MAX)
         self.tuned_scales: Dict[str, int] = {}   # site -> scale last tuned at
         self._cycles = 0
+        # one long-lived executor for every cycle's campaign: a
+        # local-cluster fabric keeps its worker processes alive across
+        # cycles, so repeated autotunes don't re-pay process startup
+        self._executor = (make_executor(self.config.executor,
+                                        workers=self.config.workers)
+                          if self.config.executor else None)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._cycle_lock = threading.Lock()      # one cycle at a time
@@ -231,7 +256,8 @@ class ServeAutotuner:
                 cfg=cfg.opt, constraints=cfg.constraints, seed=cfg.seed,
                 mep=mep, label=f"autotune:{site}@{scale}"))
         camp = Campaign(self.platform, patterns=self.patterns,
-                        cache=self.cache, db=self.db, verbose=self.verbose)
+                        cache=self.cache, db=self.db, verbose=self.verbose,
+                        executor=self._executor, max_workers=cfg.workers)
         rep.results = camp.run(jobs, stop=self._stop)
         for (site, scale), res in zip(rep.hot.items(), rep.results):
             # an interrupted job stays un-tuned so the next cycle resumes
@@ -296,3 +322,9 @@ class ServeAutotuner:
             self._thread.join(timeout)
             if not self._thread.is_alive():
                 self._thread = None
+        if self._executor is not None and self._thread is None:
+            # only wind the fabric down once no cycle can be in flight —
+            # closing under a still-draining thread would kill workers
+            # mid-exchange and burn their jobs' retry budgets; a later
+            # stop() (thread finished) closes it then
+            self._executor.close()

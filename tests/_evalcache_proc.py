@@ -1,0 +1,67 @@
+"""Child-process driver for the multi-process EvalCache / ResultsDB
+tests.  Loads ``repro.core.evalcache`` straight from its file with a
+stub ``repro.core.kernelcase`` so the child never pays the package
+import (jax) — startup is milliseconds, which keeps the two children of
+the race test overlapping.
+
+    python tests/_evalcache_proc.py race   <cache_path> <side_path>
+    python tests/_evalcache_proc.py append <db_path> <writer_id> <n>
+"""
+import importlib.util
+import os
+import sys
+import time
+import types
+
+
+def load_evalcache():
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", "src", "repro", "core", "evalcache.py")
+    pkg = types.ModuleType("repro")
+    pkg.__path__ = []
+    core = types.ModuleType("repro.core")
+    core.__path__ = []
+    kc = types.ModuleType("repro.core.kernelcase")
+    kc.Variant = dict
+    sys.modules.update({"repro": pkg, "repro.core": core,
+                        "repro.core.kernelcase": kc})
+    spec = importlib.util.spec_from_file_location("repro.core.evalcache",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclasses resolves cls.__module__ through sys.modules at class
+    # creation time, so register the module before executing it
+    sys.modules["repro.core.evalcache"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main() -> int:
+    ec = load_evalcache()
+    mode = sys.argv[1]
+    if mode == "race":
+        cache_path, side = sys.argv[2], sys.argv[3]
+        spec = ec.canonical_spec("gemm", {"block_m": 64}, 256,
+                                 "tpu-v5e-model", r=5, k=1)
+        cache = ec.EvalCache(cache_path)
+
+        def compute():
+            fd = os.open(side, os.O_WRONLY | os.O_APPEND | os.O_CREAT)
+            os.write(fd, b"computed\n")
+            os.close(fd)
+            time.sleep(0.8)       # hold the key long enough to overlap
+            return ec.EvalRecord(status="ok", time_s=2.5)
+
+        rec, _ = cache.get_or_compute(spec, compute)
+        return 0 if rec.time_s == 2.5 else 1
+    if mode == "append":
+        db_path, writer, n = sys.argv[2], int(sys.argv[3]), int(sys.argv[4])
+        db = ec.ResultsDB(db_path)
+        filler = "x" * 512   # cross any internal buffering boundary
+        for i in range(n):
+            db.append("round", writer=writer, i=i, filler=filler)
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

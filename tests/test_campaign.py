@@ -34,7 +34,7 @@ def test_evalcache_hit_miss_and_persistence(tmp_path):
     rec2, hit2 = cache.get_or_compute(spec, compute)
     assert hit2 and rec2.time_s == 1.5 and len(calls) == 1
     assert cache.stats() == {"hits": 1, "misses": 1, "waits": 0,
-                             "entries": 1}
+                             "stale": 0, "entries": 1}
     # key order in the variant dict must not matter
     spec_perm = canonical_spec("gemm", {"block_m": 128}, 256,
                                "tpu-v5e-model", k=1, r=5)
@@ -227,7 +227,7 @@ def test_campaign_dedups_mep_and_shares_cache_across_jobs():
                 cfg=OptConfig(d_rounds=1, n_candidates=1, r=5, k=1),
                 constraints=FAST, label="gemm#direct"),
     ])
-    assert len(camp._meps) == 1          # one MEP built for both jobs
+    assert len(camp.executor._meps) == 1   # one MEP built for both jobs
     assert res_d.cache_hits >= 1         # baseline re-measure was a hit
     assert res_d.baseline_time_s == res_h.baseline_time_s
 
