@@ -1,4 +1,4 @@
-.PHONY: verify test-fast test-workers bench bench-full
+.PHONY: verify test-fast test-workers test-conformance bench bench-full
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -14,6 +14,14 @@ test-fast:
 test-workers:
 	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_workers.py
+
+# Executor behavioral contract (winner equivalence, cache replay, fault
+# paths, cross-process pattern inheritance) + PatternStore journal suite
+# (the CI test-conformance job)
+test-conformance:
+	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_executor_conformance.py \
+			tests/test_patterns_store.py
 
 # Campaign-engine benchmark tables (CI-scale parameters)
 bench:

@@ -61,6 +61,12 @@ def main() -> None:
                          "REPRO_CAMPAIGN_EXECUTOR overrides)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the persistent evaluation cache")
+    ap.add_argument("--patterns", default=None, metavar="PATH",
+                    help="persistent Performance Pattern Inheritance "
+                         "store (JSONL journal; shared with subprocess/"
+                         "cluster workers).  Default: patterns.jsonl "
+                         "next to --out; 'none' keeps the store in "
+                         "memory only")
     args = ap.parse_args()
     if args.full:
         os.environ["REPRO_BENCH_FULL"] = "1"
@@ -69,21 +75,33 @@ def main() -> None:
     from benchmarks.common import BenchContext
     from benchmarks import (table1_polybench_a, table2_polybench_b,
                             table3_appsdk, table4_hotspots, table5_serve,
-                            table6_workers)
+                            table6_workers, table7_ppi)
 
     if args.out:
         res_dir = os.path.dirname(args.out) or "."
         os.makedirs(res_dir, exist_ok=True)
         cache = None if args.no_cache else EvalCache(
             os.path.join(res_dir, "evalcache.jsonl"))
+        pat_path = args.patterns
+        if not pat_path:
+            pat_path = os.path.join(res_dir, "patterns.jsonl")
+            legacy = os.path.join(res_dir, "patterns.json")
+            if not os.path.exists(pat_path) and os.path.exists(legacy):
+                # results dir from before the journal store: keep the
+                # learned patterns (migration rewrites it in place)
+                pat_path = legacy
+        store = PatternStore() if args.patterns == "none" \
+            else PatternStore(pat_path)
         ctx = BenchContext(
-            store=PatternStore(os.path.join(res_dir, "patterns.json")),
+            store=store,
             cache=cache,
             db=ResultsDB(os.path.join(res_dir, "campaign.jsonl")),
             max_workers=args.workers, executor=args.executor)
     else:           # --out '': leave no state on disk
         cache = None if args.no_cache else EvalCache()
-        ctx = BenchContext(store=PatternStore(), cache=cache,
+        store = PatternStore(args.patterns) \
+            if args.patterns and args.patterns != "none" else PatternStore()
+        ctx = BenchContext(store=store, cache=cache,
                            max_workers=args.workers, executor=args.executor)
 
     tables = {
@@ -93,6 +111,7 @@ def main() -> None:
         "4": ("table4_hotspots", table4_hotspots.main),
         "5": ("table5_serve_autotune", table5_serve.main),
         "6": ("table6_workers", table6_workers.main),
+        "7": ("table7_ppi", table7_ppi.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

@@ -5,11 +5,18 @@ runs the same §3.2 round structure over many ``KernelCase``s at once:
 
     for each case (concurrently, over an evaluation executor):
         d = 0..D-1:                                  eq. 5 outer loop
+            re-read inherited hints from the PatternStore (PPI)
             propose N candidates from K^(d)          (LLM / heuristic)
             evaluate each: build → FE → time         eq. 3–4, AER-wrapped
             K^(d+1) = argmin over the feasible set   eq. 5
+            record the round's win into the PatternStore
             stop when the round's gain ≤ 1 + eps     (uniform early stop)
-        record the winning delta into the PatternStore (PPI)
+
+    The PatternStore is the flock-journaled multi-process store
+    (``repro.core.patterns``): wins recorded by one case — in this
+    process or a subprocess worker — reach every concurrent case's
+    next round, and a ``patterns="path.jsonl"`` string opens the
+    persistent store shared with out-of-process workers.
 
 ``Campaign`` is the *scheduler* half: it owns the shared evaluation
 cache, pattern store, and results journal, and hands the per-case search
@@ -74,13 +81,17 @@ class Campaign:
     pluggable evaluation executor."""
 
     def __init__(self, platform: Platform, *,
-                 patterns: Optional[PatternStore] = None,
+                 patterns: Union[PatternStore, str, None] = None,
                  cache: Optional[EvalCache] = None,
                  db: Optional[ResultsDB] = None,
                  max_workers: Optional[int] = None,
                  executor: Union[Executor, str, None] = None,
                  verbose: bool = False):
         self.platform = platform
+        if isinstance(patterns, str):
+            # a path opens the persistent multi-process journal store —
+            # the form out-of-process executors can ship to workers
+            patterns = PatternStore(patterns)
         self.patterns = patterns
         self.cache = cache
         self.db = db

@@ -143,21 +143,21 @@ class EvalRecord:
         return rec
 
 
-class _KeyFileLock:
-    """Advisory per-key lock file under ``<cache>.locks/``: the exclusive
-    holder computes; every other process blocks in ``__enter__`` and then
-    finds the published record on disk.  Lock files are never unlinked
-    (unlink+recreate races would let two holders coexist); they are
-    empty, bounded by the number of distinct keys, and reusable."""
+class FileLock:
+    """Advisory exclusive file lock (``flock``), shared by the eval
+    cache's per-key locks and the PatternStore's per-store lock.  Lock
+    files are never unlinked (unlink+recreate races would let two
+    holders coexist); they are empty and reusable.  A no-op on hosts
+    without ``fcntl`` (degrades to thread-only safety)."""
 
-    def __init__(self, locks_dir: str, key: str):
-        os.makedirs(locks_dir, exist_ok=True)
-        self.path = os.path.join(locks_dir, f"{key}.lock")
+    def __init__(self, path: str):
+        self.path = path
         self.fd: Optional[int] = None
 
-    def __enter__(self) -> "_KeyFileLock":
-        self.fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
-        fcntl.flock(self.fd, fcntl.LOCK_EX)
+    def __enter__(self) -> "FileLock":
+        if fcntl is not None:
+            self.fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(self.fd, fcntl.LOCK_EX)
         return self
 
     def __exit__(self, *exc) -> None:
@@ -165,6 +165,17 @@ class _KeyFileLock:
             fcntl.flock(self.fd, fcntl.LOCK_UN)
             os.close(self.fd)
             self.fd = None
+
+
+class _KeyFileLock(FileLock):
+    """Per-key lock file under ``<cache>.locks/``: the exclusive holder
+    computes; every other process blocks in ``__enter__`` and then finds
+    the published record on disk.  Bounded by the number of distinct
+    keys."""
+
+    def __init__(self, locks_dir: str, key: str):
+        os.makedirs(locks_dir, exist_ok=True)
+        super().__init__(os.path.join(locks_dir, f"{key}.lock"))
 
 
 class EvalCache:

@@ -43,6 +43,10 @@ class RoundState:
     feedback: Dict[str, float]
     history: List[Dict[str, Any]] = field(default_factory=list)
     errors: List[str] = field(default_factory=list)
+    # PPI hint deltas snapshotted by the search loop at the round
+    # boundary (one journal read per round, and exactly what the round
+    # record journals); None → the proposer queries its own store
+    hints: Optional[List[Dict[str, Any]]] = None
 
 
 class Proposer:
@@ -134,12 +138,14 @@ class HeuristicProposer(Proposer):
             push(recipe0)
 
         # 1. Performance Pattern Inheritance hints (paper §3.2)
-        if self.patterns is not None:
-            for delta in self.patterns.suggest(case, self.platform):
-                v = dict(base)
-                v.update({k: val for k, val in delta.items()
-                          if k in case.variant_space})
-                push(v)
+        hints = state.hints
+        if hints is None and self.patterns is not None:
+            hints = self.patterns.suggest(case, self.platform)
+        for delta in hints or []:
+            v = dict(base)
+            v.update({k: val for k, val in delta.items()
+                      if k in case.variant_space})
+            push(v)
 
         # 2. profile-guided moves
         ai = state.feedback.get("arithmetic_intensity", 0.0)
@@ -387,8 +393,10 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
         return self._chat(prompt)
 
     def propose(self, case, state, n):
-        hints = (self.patterns.suggest(case, self.platform)
-                 if self.patterns else [])
+        hints = state.hints
+        if hints is None:
+            hints = (self.patterns.suggest(case, self.platform)
+                     if self.patterns else [])
         prompt = self.PROMPT.format(
             name=case.name, family=case.family,
             variant=state.baseline_variant, space=case.variant_space,

@@ -12,9 +12,12 @@ the *scheduler's process* too.  A campaign hands its ``CaseJob``s to an
   as serialized eval specs (``job_to_spec``) over a line-JSON pipe to
   ``scripts/worker_main.py`` workers; results come back as full
   ``OptResult`` wire dicts.  The shared ``EvalCache`` JSONL (advisory
-  file locks + namespace) and ``ResultsDB`` journal (atomic O_APPEND
-  lines) are the only shared state, so the same code path scales to
-  remote hosts over shared storage.
+  file locks + namespace), the ``PatternStore`` journal (per-store
+  flock; workers record wins round-by-round and re-read hints at round
+  boundaries, so §3.2 Performance Pattern Inheritance flows *across*
+  worker processes mid-campaign), and the ``ResultsDB`` journal (atomic
+  O_APPEND lines) are the only shared state, so the same code path
+  scales to remote hosts over shared storage.
 * ``LocalClusterExecutor`` — multiplexes N persistent subprocess workers
   with per-worker platform pinning: measured (wall-clock) platforms get
   one *exclusive* worker each (parallel timing would corrupt the paper's
@@ -52,7 +55,7 @@ from repro.core.evalcache import EvalCache, ResultsDB, json_safe
 from repro.core.kernelcase import KernelCase
 from repro.core.mep import MEP, MEPConstraints, build_mep
 from repro.core.optimizer import Evaluator, OptConfig, OptResult, RoundLog
-from repro.core.patterns import PatternStore
+from repro.core.patterns import Pattern, PatternStore
 from repro.core.profiler import Platform, platform_from_name
 from repro.core.proposer import (LLMBatcher, LLMProposer, Proposer,
                                  RoundState, proposer_from_spec)
@@ -128,10 +131,20 @@ def run_case_job(job: CaseJob, platform: Platform, *,
             res.stop_reason = "stop requested"
             res.mep_log.append(f"round {d}: stopped (stop requested)")
             break
+        hints: Optional[List[Pattern]] = None
+        if patterns is not None:
+            # round boundary: fold other workers' journal appends in, so
+            # a win recorded by a concurrent case — possibly in another
+            # process — reaches this round's proposal wave (§3.2 PPI).
+            # ONE snapshot per round: the proposer consumes exactly the
+            # hint deltas the round record journals below
+            hints = patterns.suggest_patterns(case, platform.name)
         state = RoundState(
             round=d, baseline_variant=best_v, baseline_time_s=best_t,
             feedback=platform.profile_feedback(case, best_v, mep.scale),
-            history=history, errors=errors)
+            history=history, errors=errors,
+            hints=None if hints is None
+            else [dict(p.delta) for p in hints])
         cands = proposer.propose(case, state, cfg.n_candidates)
         rl = RoundLog(round=d, baseline_time_s=best_t)
         for v in cands:
@@ -164,13 +177,21 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                             f"{1.0 + cfg.improve_eps:.4f}x")
         rl.stop_reason = stop
         res.rounds.append(rl)
+        if rl.improved and patterns is not None:
+            # record the round's cumulative win immediately (not at job
+            # end): concurrent cases' next rounds inherit it mid-campaign
+            patterns.record(case, platform.name, baseline_v, best_v,
+                            t_base / best_t if best_t else float("inf"))
         if db:
             db.append(
                 "round", campaign=campaign_id, job=job.name,
-                case=case.name, round=d,
+                case=case.name, round=d, worker=os.getpid(),
                 baseline_time_s=rl.baseline_time_s,
                 best_time_s=rl.best_time_s, improved=rl.improved,
                 stop_reason=stop,
+                ppi_hints=[{"delta": p.delta, "source": p.source_kernel,
+                            "gain": p.gain, "pid": p.pid}
+                           for p in hints or []],
                 candidates=[{"variant": c.variant, "status": c.status,
                              "time_s": c.time_s, "cached": c.cached}
                             for c in rl.candidates])
@@ -227,6 +248,11 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
         "cache": None if ctx.cache is None else {
             "path": ctx.cache.path, "ns": ctx.cache.namespace,
             "ttl_s": ctx.cache.ttl_s},
+        # a file-backed PatternStore ships its coordinates so workers
+        # record and suggest against the shared journal; an in-memory
+        # store stays scheduler-side (recording on job completion only)
+        "patterns": ctx.patterns.to_spec()
+        if ctx.patterns is not None and ctx.patterns.path else None,
         "db": ctx.db.path if ctx.db else None,
         "campaign": campaign_id,
         "verbose": ctx.verbose,
@@ -550,9 +576,11 @@ class SubprocessExecutor(Executor):
                 return
             if reply.get("ok"):
                 res = OptResult.from_dict(reply["result"])
-                if ctx.patterns is not None:
-                    # PPI recording stays scheduler-side: the JSON
-                    # pattern store is not multi-process safe
+                if ctx.patterns is not None and not ctx.patterns.path:
+                    # in-memory store couldn't cross the process
+                    # boundary: fall back to recording on completion
+                    # (a file-backed store was shipped in the spec and
+                    # already recorded worker-side, round by round)
                     ctx.patterns.record(job.case, ctx.platform.name,
                                         res.baseline_variant,
                                         res.best_variant, res.speedup)
@@ -586,6 +614,8 @@ class SubprocessExecutor(Executor):
             self.close()
         if ctx.cache is not None:
             ctx.cache.reload()       # fold workers' entries into our view
+        if ctx.patterns is not None and ctx.patterns.path:
+            ctx.patterns.reload()    # fold workers' recorded patterns too
         return outcomes
 
     def warm(self, slots: Optional[List[Any]] = None,
@@ -704,6 +734,7 @@ def worker_main() -> int:
 
     platforms: Dict[str, Platform] = {}
     caches: Dict[Tuple, EvalCache] = {}
+    stores: Dict[Tuple, PatternStore] = {}
     dbs: Dict[str, ResultsDB] = {}
 
     for line in sys.stdin:
@@ -730,6 +761,13 @@ def worker_main() -> int:
                     caches[ck] = EvalCache(c["path"], namespace=c.get("ns"),
                                            ttl_s=c.get("ttl_s"))
                 cache = caches[ck]
+            patterns = None
+            if spec.get("patterns"):
+                ps = spec["patterns"]
+                sk = (ps["path"], ps.get("ns"))
+                if sk not in stores:
+                    stores[sk] = PatternStore.from_spec(ps)
+                patterns = stores[sk]
             db = None
             if spec.get("db"):
                 db = dbs.setdefault(spec["db"], ResultsDB(spec["db"]))
@@ -738,7 +776,8 @@ def worker_main() -> int:
                 stop_event.set()
             res = run_case_job(
                 job, platform, campaign_id=spec.get("campaign", ""),
-                cache=cache, db=db, stop_event=stop_event,
+                cache=cache, patterns=patterns, db=db,
+                stop_event=stop_event,
                 verbose=spec.get("verbose", False), scale=scale)
             reply = {"ok": True, "result": res.to_dict(full=True)}
         except Exception as e:  # noqa: BLE001 — job errors go to scheduler

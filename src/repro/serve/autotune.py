@@ -76,6 +76,10 @@ class AutotuneConfig:
     # background campaigns never contend with request threads for the GIL
     executor: Optional[str] = None
     workers: Optional[int] = None  # fabric width (None → env/policy)
+    # persistent Performance Pattern Inheritance store (JSONL journal
+    # path): campaign wins survive restarts and — because the store is
+    # multi-process safe — flow to out-of-process campaign workers
+    patterns: Optional[str] = None
 
 
 def snap_scale(case: KernelCase, observed: int) -> int:
@@ -144,6 +148,8 @@ class ServeAutotuner:
                 cache = EvalCache()
         self.cache = cache
         self.db = db
+        if patterns is None and self.config.patterns:
+            patterns = PatternStore(self.config.patterns)
         self.patterns = patterns
         self.telemetry = telemetry if telemetry is not None else ops.telemetry
         self.proposer_factory = proposer_factory or (

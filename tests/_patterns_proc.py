@@ -1,0 +1,70 @@
+"""Child-process driver for the multi-process PatternStore race tests
+(mirrors ``tests/_evalcache_proc.py``).  Loads ``repro.core.patterns``
+(and its ``evalcache`` dependency) straight from the source files with a
+stub ``repro.core.kernelcase`` so the child never pays the package
+import (jax) — startup is milliseconds, which keeps the N hammer
+children overlapping.
+
+    python tests/_patterns_proc.py hammer <store_path> <writer_id> <n>
+
+Each hammer child records ``n`` distinct per-writer patterns plus ``n``
+observations of one delta shared by every writer (merge contention,
+monotonically increasing gain), with the compaction threshold forced
+low so compactions race the other writers' appends.
+"""
+import importlib.util
+import os
+import sys
+import types
+
+
+class _Case:
+    def __init__(self, name, family):
+        self.name, self.family = name, family
+
+
+def load_patterns():
+    here = os.path.dirname(os.path.abspath(__file__))
+    core_dir = os.path.join(here, "..", "src", "repro", "core")
+    pkg = types.ModuleType("repro")
+    pkg.__path__ = []
+    core = types.ModuleType("repro.core")
+    core.__path__ = []
+    kc = types.ModuleType("repro.core.kernelcase")
+    kc.Variant = dict
+    kc.KernelCase = _Case
+    sys.modules.update({"repro": pkg, "repro.core": core,
+                        "repro.core.kernelcase": kc})
+    for name in ("evalcache", "patterns"):
+        spec = importlib.util.spec_from_file_location(
+            f"repro.core.{name}", os.path.join(core_dir, f"{name}.py"))
+        mod = importlib.util.module_from_spec(spec)
+        # dataclasses resolves cls.__module__ through sys.modules at
+        # class creation time, so register before executing
+        sys.modules[f"repro.core.{name}"] = mod
+        spec.loader.exec_module(mod)
+    return sys.modules["repro.core.patterns"]
+
+
+def main() -> int:
+    pat = load_patterns()
+    mode = sys.argv[1]
+    if mode == "hammer":
+        store_path, writer, n = sys.argv[2], int(sys.argv[3]), int(sys.argv[4])
+        store = pat.PatternStore(store_path)
+        store.COMPACT_MIN_LINES = 16       # force compactions mid-race
+        case = _Case(f"k{writer}", "matmul")
+        for i in range(n):
+            # distinct per-writer delta: must never be lost
+            store.record(case, "cpu", {},
+                         {"writer": writer, "i": i}, gain=2.0)
+            # shared delta: every writer fights over the merge; the
+            # globally best gain must win
+            store.record(case, "cpu", {}, {"block_m": 128},
+                         gain=1.5 + writer + i * 0.001)
+        return 0 if store.quarantined == 0 else 1
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -234,7 +234,7 @@ def test_campaign_dedups_mep_and_shares_cache_across_jobs():
 
 # ------------------------------------------------- concurrency safety ----
 def test_concurrent_pattern_store_record(tmp_path):
-    store = PatternStore(str(tmp_path / "pat.json"))
+    store = PatternStore(str(tmp_path / "pat.jsonl"))
     case = get_case("gemm")
     base = dict(case.baseline_variant)
 
@@ -255,8 +255,10 @@ def test_concurrent_pattern_store_record(tmp_path):
     assert same[0].gain == pytest.approx(2.2)     # best observed gain kept
     distinct = [p for p in store.patterns if "block_n" in p.delta]
     assert len(distinct) == 8
-    with open(store.path) as f:                   # file stayed valid JSON
-        assert len(json.load(f)) == len(store.patterns)
+    with open(store.path) as f:       # every journal line stayed valid JSON
+        lines = [json.loads(line) for line in f if line.strip()]
+    assert lines                      # replaying the journal merges back
+    assert len(PatternStore(store.path)) == len(store.patterns)
 
 
 def test_cpu_platform_compiled_cache_is_bounded():

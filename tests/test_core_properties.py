@@ -1,10 +1,13 @@
-"""Hypothesis property tests on the MEP invariants (eq. 2–4).
+"""Hypothesis property tests on the MEP invariants (eq. 2–4) and the
+PatternStore invariants (§3.2 Performance Pattern Inheritance).
 
 Kept separate from test_core_mep.py so environments without the optional
 ``hypothesis`` dev dependency (see requirements-dev.txt) skip these
 instead of failing collection.
 """
+import json
 import math
+import random
 
 import numpy as np
 import pytest
@@ -14,9 +17,10 @@ pytest.importorskip("hypothesis",
                            "requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import fe_check, get_case, trimmed_mean
+from repro.core import PatternStore, fe_check, get_case, trimmed_mean
 from repro.core.datagen import generate
 from repro.core.kernelcase import ArraySpec
+from repro.core.patterns import Pattern
 
 
 # -------------------------------------------------------- eq.3 trimmed ----
@@ -82,3 +86,85 @@ def test_random_variants_preserve_fe(data):
     r = fe_check(case, variant, min(case.scales), n_input_sets=1,
                  rtol_scale=rtol)
     assert r.ok, f"{name} {variant}: {r.detail}"
+
+
+# ---------------------------------------- PatternStore invariants (§3.2) --
+class _Case:
+    """record/suggest only touch .name and .family."""
+    def __init__(self, name, family):
+        self.name, self.family = name, family
+
+
+_gains = st.floats(min_value=1.03, max_value=100.0, allow_nan=False)
+_names = st.sampled_from(["k0", "k1", "k2", "k3"])
+_families = st.sampled_from(["matmul", "scan", "stencil"])
+_platforms = st.sampled_from(["cpu", "tpu-v5e-model"])
+_deltas = st.dictionaries(
+    st.sampled_from(["block_m", "block_n", "block_k", "unroll", "dtype"]),
+    st.sampled_from([32, 64, 128, 256, "bf16", True]),
+    min_size=1, max_size=3)
+
+
+@given(name=_names, family=_families, platform=_platforms,
+       delta=_deltas, gain=_gains)
+@settings(max_examples=50, deadline=None)
+def test_pattern_record_suggest_roundtrip(name, family, platform,
+                                          delta, gain):
+    """Any recorded win (gain above the noise floor, non-empty delta) is
+    suggested back for a sibling kernel of the same family/platform."""
+    store = PatternStore()
+    store.record(_Case(name, family), platform, {}, dict(delta), gain)
+    hints = store.suggest(_Case("sibling", family), platform)
+    assert dict(delta) in hints
+
+
+@given(gains=st.lists(_gains, min_size=1, max_size=10),
+       delta=_deltas)
+@settings(max_examples=50, deadline=None)
+def test_pattern_merge_keeps_max_gain(gains, delta):
+    store = PatternStore()
+    for g in gains:
+        store.record(_Case("k", "matmul"), "cpu", {}, dict(delta), g)
+    assert len(store) == 1
+    assert store.patterns[0].gain == pytest.approx(max(gains))
+
+
+@given(own_gain=_gains, other_gain=_gains, platform=_platforms)
+@settings(max_examples=50, deadline=None)
+def test_suggest_never_echoes_own_delta_first(own_gain, other_gain,
+                                              platform):
+    """A kernel's own winning delta is already its baseline: whenever
+    any other kernel has contributed a pattern, the own-sourced delta
+    must not lead the hints — regardless of relative gains."""
+    store = PatternStore()
+    store.record(_Case("me", "matmul"), platform, {},
+                 {"block_m": 128}, own_gain)
+    store.record(_Case("other", "matmul"), "cpu", {},
+                 {"block_n": 64}, other_gain)
+    first = store.suggest_patterns(_Case("me", "matmul"), platform)[0]
+    assert first.source_kernel != "me"
+
+
+@given(data=st.lists(
+    st.tuples(_names, _families, _platforms, _deltas, _gains),
+    min_size=1, max_size=20), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_journal_replay_is_order_insensitive(tmp_path_factory, data, seed):
+    """Shuffling the journal lines cannot change the merged view: same
+    (family, platform, delta) keys, same max gains."""
+    import os
+    tmp = tmp_path_factory.mktemp("pat")
+    lines = [json.dumps(Pattern(f, p, dict(d), g, n).to_dict())
+             for n, f, p, d, g in data]
+    shuffled = list(lines)
+    random.Random(seed).shuffle(shuffled)
+
+    def merged_view(journal_lines, tag):
+        path = os.path.join(str(tmp), f"{tag}.jsonl")
+        with open(path, "w") as f:
+            f.write("\n".join(journal_lines) + "\n")
+        store = PatternStore(path)
+        return {k: v.gain for k, v in
+                ((p.merge_key(), p) for p in store.patterns)}
+
+    assert merged_view(lines, "a") == merged_view(shuffled, "b")

@@ -46,6 +46,22 @@ def make_autotuner(db=None, **cfg_kw):
                           cache=EvalCache(), db=db)
 
 
+def test_config_patterns_knob_opens_persistent_store(tmp_path):
+    """AutotuneConfig.patterns points the autotuner at the persistent
+    multi-process PatternStore, so campaign wins survive restarts and
+    ship to out-of-process campaign workers."""
+    path = str(tmp_path / "pat.jsonl")
+    tuner = make_autotuner(patterns=path)
+    assert tuner.patterns is not None and tuner.patterns.path == path
+    # an explicitly passed store still wins over the config knob
+    from repro.core import PatternStore
+    mine = PatternStore()
+    tuner2 = ServeAutotuner(TPUModelPlatform(),
+                            config=AutotuneConfig(patterns=path),
+                            cache=EvalCache(), patterns=mine)
+    assert tuner2.patterns is mine
+
+
 def test_snap_scale_picks_nearest_supported():
     case = get_case("attention_prefill")         # scales (256, ..., 2048)
     assert snap_scale(case, 12) == 256
