@@ -1,4 +1,5 @@
-.PHONY: verify test-fast test-workers test-conformance bench bench-full
+.PHONY: verify test-fast test-workers test-conformance test-measure \
+	bench bench-full
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -22,6 +23,14 @@ test-conformance:
 	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_executor_conformance.py \
 			tests/test_patterns_store.py
+
+# Adaptive measurement engine: CI-based stopping, incumbent racing,
+# cross-process timing lease (the CI test-measure job)
+test-measure:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_measure.py \
+			tests/test_executor_conformance.py::test_timing_lease_two_process_contention \
+			tests/test_executor_conformance.py::test_measured_fanout_then_serial_replay_agree
 
 # Campaign-engine benchmark tables (CI-scale parameters)
 bench:

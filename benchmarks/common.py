@@ -22,8 +22,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core import (Campaign, CaseJob, DirectProposer, EvalCache,
-                        HeuristicProposer, MEPConstraints, OptConfig,
-                        PatternStore, ResultsDB)
+                        HeuristicProposer, MeasureConfig, MEPConstraints,
+                        OptConfig, PatternStore, ResultsDB)
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -47,18 +47,16 @@ class BenchContext:
     db: Optional[ResultsDB] = None
     max_workers: Optional[int] = None
     executor: Optional[str] = None   # inprocess | subprocess | local-cluster
+    measure: Optional[MeasureConfig] = None   # adaptive-engine policy
 
     def campaign(self, platform) -> Campaign:
-        # --workers only applies to concurrency-safe (analytic) platforms;
-        # measured platforms keep the engine's one-worker clamp so a
-        # global override can't corrupt eq. 3 wall-clock timing.  (The
-        # local-cluster executor additionally pins measured platforms to
-        # one exclusive worker process.)
-        workers = self.max_workers \
-            if getattr(platform, "concurrency_safe", False) else None
+        # --workers applies to measured platforms too: their wall-clock
+        # slices serialize on the campaign's timing lease, so fan-out no
+        # longer threatens eq. 3
         return Campaign(platform, patterns=self.store, cache=self.cache,
-                        db=self.db, max_workers=workers,
-                        executor=self.executor, verbose=True)
+                        db=self.db, max_workers=self.max_workers,
+                        executor=self.executor, measure=self.measure,
+                        verbose=True)
 
 
 def ensure_ctx(ctx) -> BenchContext:

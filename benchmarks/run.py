@@ -67,15 +67,33 @@ def main() -> None:
                          "cluster workers).  Default: patterns.jsonl "
                          "next to --out; 'none' keeps the store in "
                          "memory only")
+    ap.add_argument("--fixed-r", action="store_true",
+                    help="disable the adaptive measurement engine: every "
+                         "timing pays the full eq. 3 R cap (no CI early "
+                         "stop, no incumbent racing)")
+    ap.add_argument("--ci-rel", type=float, default=None, metavar="X",
+                    help="adaptive stop threshold: end a timing once the "
+                         "CI half-width falls under X x the trimmed mean "
+                         "(default: engine default, 0.05)")
+    ap.add_argument("--no-race", action="store_true",
+                    help="keep adaptive reps but disable incumbent racing")
     args = ap.parse_args()
     if args.full:
         os.environ["REPRO_BENCH_FULL"] = "1"
 
-    from repro.core import EvalCache, PatternStore, ResultsDB
+    from repro.core import EvalCache, MeasureConfig, PatternStore, ResultsDB
     from benchmarks.common import BenchContext
     from benchmarks import (table1_polybench_a, table2_polybench_b,
                             table3_appsdk, table4_hotspots, table5_serve,
-                            table6_workers, table7_ppi)
+                            table6_workers, table7_ppi, table8_measure)
+
+    measure = None
+    if args.fixed_r or args.ci_rel is not None or args.no_race:
+        measure = MeasureConfig(
+            adaptive=not args.fixed_r,
+            ci_rel=args.ci_rel if args.ci_rel is not None
+            else MeasureConfig.ci_rel,
+            race=not (args.fixed_r or args.no_race))
 
     if args.out:
         res_dir = os.path.dirname(args.out) or "."
@@ -96,13 +114,15 @@ def main() -> None:
             store=store,
             cache=cache,
             db=ResultsDB(os.path.join(res_dir, "campaign.jsonl")),
-            max_workers=args.workers, executor=args.executor)
+            max_workers=args.workers, executor=args.executor,
+            measure=measure)
     else:           # --out '': leave no state on disk
         cache = None if args.no_cache else EvalCache()
         store = PatternStore(args.patterns) \
             if args.patterns and args.patterns != "none" else PatternStore()
         ctx = BenchContext(store=store, cache=cache,
-                           max_workers=args.workers, executor=args.executor)
+                           max_workers=args.workers, executor=args.executor,
+                           measure=measure)
 
     tables = {
         "1": ("table1_polybench_a", table1_polybench_a.main),
@@ -112,6 +132,7 @@ def main() -> None:
         "5": ("table5_serve_autotune", table5_serve.main),
         "6": ("table6_workers", table6_workers.main),
         "7": ("table7_ppi", table7_ppi.main),
+        "8": ("table8_measure", table8_measure.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

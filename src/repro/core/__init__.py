@@ -6,6 +6,9 @@ iterate (optimize, eq. 3–5, AER, PPI) → reintegrate (integrate.install).
 from repro.core.kernelcase import (ArraySpec, KernelCase, Variant, cases,
                                    get_case, register)
 from repro.core.datagen import DataBudget, generate
+from repro.core.measure import (MeasureConfig, TimingLease, get_lease,
+                                measure_callable, measure_fn,
+                                trimmed_stats)
 from repro.core.mep import MEP, MEPConstraints, build_mep, emit_script
 from repro.core.profiler import (CPUPlatform, Platform, TimingResult,
                                  TPUModelPlatform, platform_from_name,

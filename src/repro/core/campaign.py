@@ -23,17 +23,21 @@ cache, pattern store, and results journal, and hands the per-case search
 to an ``Executor`` (``repro.core.workers``) — it never touches an MEP
 itself.  Three transports share one code path:
 
-* ``InProcessExecutor``   (default) — bounded thread pool; platforms
-  advertise ``concurrency_safe``, measured (CPU wall-clock) platforms
-  are clamped to one worker so parallel timing can't pollute eq. 3's
-  trimmed mean, while model platforms fan out fully.
+* ``InProcessExecutor``   (default) — bounded thread pool.
 * ``SubprocessExecutor``  — one MEP per worker process; jobs ship as
   serialized eval specs, the JSONL cache/journal on shared storage are
   the only shared state (advisory file locks keep cross-process
   in-flight dedup intact).
-* ``LocalClusterExecutor`` — persistent subprocess workers with
-  per-worker platform pinning (measured platforms exclusive, analytic
-  fan-out).
+* ``LocalClusterExecutor`` — persistent subprocess workers.
+
+Measured (wall-clock) platforms fan out like analytic ones: the
+campaign owns a **timing lease** (an flock'd arbiter file next to the
+eval cache, see ``repro.core.measure``) that serializes only the actual
+wall-clock slices across every thread and worker process, so eq. 3's
+trimmed mean stays clean while build/compile/FE/LLM work overlaps.
+``measure=MeasureConfig(...)`` sets the campaign-wide adaptive
+measurement policy (CI-based early stop under the eq. 3 R cap,
+incumbent racing); per-job ``OptConfig.measure`` overrides it.
 
 Select with ``executor=`` (an ``Executor``, or a kind string:
 ``inprocess`` / ``subprocess`` / ``local-cluster``), or the
@@ -66,6 +70,7 @@ import time
 from typing import List, Optional, Union
 
 from repro.core.evalcache import EvalCache, ResultsDB
+from repro.core.measure import MeasureConfig, default_lease_path
 from repro.core.optimizer import OptResult
 from repro.core.patterns import PatternStore
 from repro.core.profiler import Platform
@@ -86,6 +91,8 @@ class Campaign:
                  db: Optional[ResultsDB] = None,
                  max_workers: Optional[int] = None,
                  executor: Union[Executor, str, None] = None,
+                 measure: Optional[MeasureConfig] = None,
+                 lease_path: Optional[str] = None,
                  verbose: bool = False):
         self.platform = platform
         if isinstance(patterns, str):
@@ -95,12 +102,23 @@ class Campaign:
         self.patterns = patterns
         self.cache = cache
         self.db = db
+        self.measure = measure
+        # measured platforms fan out (no one-worker clamp any more):
+        # all wall-clock slices — every thread, every worker process —
+        # serialize on one lease file, by default next to the eval
+        # cache.  The cache-less fallback is keyed by pid only: every
+        # campaign this scheduler process creates (e.g. the autotuner's
+        # repeated cycles) shares ONE lease file and ONE registry entry
+        # — timing contends for the same CPUs whichever campaign owns it
+        if lease_path is None and not getattr(platform,
+                                              "concurrency_safe", False):
+            lease_path = default_lease_path(
+                cache.path if cache is not None else None,
+                scope=str(os.getpid()))
+        self.lease_path = lease_path
         self.verbose = verbose
         if max_workers is None:
             max_workers = int(os.environ.get("REPRO_CAMPAIGN_WORKERS", "4"))
-            if not getattr(platform, "concurrency_safe", False):
-                # measured wall-clock: parallel timing corrupts eq. 3
-                max_workers = 1
         self.max_workers = max(1, max_workers)
         if executor is None:
             kind = os.environ.get("REPRO_CAMPAIGN_EXECUTOR", "inprocess")
@@ -140,7 +158,8 @@ class Campaign:
 
         ctx = WorkerContext(platform=self.platform, cache=self.cache,
                             patterns=self.patterns, db=self.db,
-                            verbose=self.verbose)
+                            verbose=self.verbose, measure=self.measure,
+                            lease_path=self.lease_path)
         outcomes = self.executor.run(jobs, ctx, campaign_id=campaign_id,
                                      stop=stop)
         failures = [(j, o) for j, o in zip(jobs, outcomes)

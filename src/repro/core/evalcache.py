@@ -127,6 +127,14 @@ class EvalRecord:
     ts: float = 0.0
     ns: str = ""                  # namespace the record was taken under
     measured: bool = False        # wall-clock (True) vs analytic timing
+    # measurement fidelity (adaptive engine): how the timing was taken,
+    # so a replayed record is auditable and a raced-out partial timing
+    # is never mistaken for a full eq. 3 measurement
+    reps: int = 0                 # reps actually collected (0 → legacy)
+    r_cap: int = 0                # eq. 3 cap that was in force
+    ci_half_width_s: float = 0.0  # CI half-width of the trimmed mean
+    raced_out: bool = False       # timing aborted by incumbent racing
+    lower_bound_s: float = 0.0    # optimistic bound the race compared
 
     def to_dict(self) -> Dict[str, Any]:
         return json_safe(asdict(self))
@@ -136,10 +144,12 @@ class EvalRecord:
         rec = EvalRecord(**{k: d[k] for k in
                             ("status", "time_s", "fe_abs_err", "repairs",
                              "error", "final_variant", "key", "spec", "ts",
-                             "ns", "measured")
-                            if k in d})
-        if rec.time_s is None:       # json_safe maps inf → None on disk
-            rec.time_s = float("inf")
+                             "ns", "measured", "reps", "r_cap",
+                             "ci_half_width_s", "raced_out",
+                             "lower_bound_s")
+                            if k in d and d[k] is not None})
+        # a None time_s (json_safe maps inf → None on disk) was dropped
+        # by the filter above, so the field default float("inf") applies
         return rec
 
 
@@ -260,19 +270,25 @@ class EvalCache:
 
     def get_or_compute(self, spec: Dict[str, Any],
                        compute: Callable[[], EvalRecord], *,
-                       measured: bool = False
+                       measured: bool = False,
+                       accept: Optional[Callable[[EvalRecord], bool]] = None
                        ) -> Tuple[EvalRecord, bool]:
         """Return ``(record, was_hit)``.  If another worker — a thread of
         this process or, when the cache is file-backed, *any process
         sharing the file* — is already computing the same key, wait for
         its result instead of recomputing.  ``measured=True`` marks the
         record as a wall-clock timing subject to namespace/TTL staleness
-        checks on later lookups."""
+        checks on later lookups.  ``accept`` lets the caller veto a
+        cached record that is not valid in its context — the adaptive
+        engine uses it to re-measure a ``raced_out`` partial timing when
+        the incumbent it lost to is no longer the incumbent — vetoed
+        records are recomputed and the fresh record replaces the old one
+        (last-wins, same key)."""
         key = spec_key(spec)
         while True:
             with self._lock:
                 rec = self._fresh_locked(key)
-                if rec is not None:
+                if rec is not None and (accept is None or accept(rec)):
                     self.hits += 1
                     return rec, True
                 ev = self._pending.get(key)
@@ -291,7 +307,8 @@ class EvalCache:
                     with self._lock:
                         self._reload_locked()
                         rec = self._fresh_locked(key)
-                        if rec is not None:
+                        if rec is not None and (accept is None
+                                                or accept(rec)):
                             self.hits += 1
                             self.waits += 1
                             return rec, True

@@ -31,7 +31,6 @@ import numpy as np
 
 from repro.core import fe as fe_mod
 from repro.core.kernelcase import KernelCase, Variant
-from repro.core.profiler import trimmed_mean
 from repro.kernels import ops
 
 
@@ -68,17 +67,15 @@ def uninstall(case: KernelCase) -> None:
 
 def measure_app(step_fn: Callable, args, *, r: int = 10, k: int = 1,
                 warmup: int = 1) -> float:
-    """Wall-clock one application step (already jitted)."""
-    for _ in range(warmup):
-        out = step_fn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(r):
-        t0 = time.perf_counter()
-        out = step_fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return trimmed_mean(times, k)
+    """Wall-clock one application step (already jitted) through the
+    measurement engine: each warmup call blocks on its own output
+    (warmup=0 is supported), and the timed reps hold the process-wide
+    timing mutex, so an integration measurement never overlaps a
+    concurrent campaign's eq. 3 slices in this process."""
+    from repro.core.measure import MeasureConfig, measure_fn
+    return measure_fn(step_fn, args, r=r, k=k,
+                      cfg=MeasureConfig(adaptive=False, race=False,
+                                        warmup=warmup)).trimmed_mean_s
 
 
 def integrated_speedup(case: KernelCase, variant: Variant,
@@ -168,16 +165,23 @@ def _max_abs_err(a, b) -> float:
 def _probe_stats(probe: Callable[[], Any], r: int, k: int
                  ) -> Tuple[float, Any]:
     """Trimmed-mean wall-clock of ``probe`` plus its (last) outputs; one
-    warmup call absorbs trace/compile."""
-    out = probe()
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(max(r, 2 * k + 1)):
+    warmup call absorbs trace/compile.  Timed through the measurement
+    engine, so guard probes serialize against concurrent campaign
+    timings in this process instead of polluting them."""
+    from repro.core.measure import MeasureConfig, measure_callable
+    out_box = []
+
+    def run_once() -> float:
         t0 = time.perf_counter()
         out = probe()
         jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return trimmed_mean(times, k), out
+        out_box[:] = [out]
+        return time.perf_counter() - t0
+
+    jax.block_until_ready(probe())      # warmup: trace/compile absorbed
+    res = measure_callable(run_once, r=max(r, 2 * k + 1), k=k,
+                           cfg=MeasureConfig(adaptive=False, race=False))
+    return res.trimmed_mean_s, out_box[0]
 
 
 def guarded_install(case: KernelCase, variant: Variant, *, scale: int,

@@ -25,9 +25,10 @@ from repro.core.aer import AER
 from repro.core import fe as fe_mod
 from repro.core.evalcache import EvalCache, EvalRecord, canonical_spec
 from repro.core.kernelcase import KernelCase, Variant
+from repro.core.measure import MeasureConfig
 from repro.core.mep import MEP, MEPConstraints
 from repro.core.patterns import PatternStore
-from repro.core.profiler import Platform
+from repro.core.profiler import Platform, TimingResult
 from repro.core.proposer import Proposer
 
 
@@ -35,18 +36,25 @@ from repro.core.proposer import Proposer
 class OptConfig:
     d_rounds: int = 6            # D (paper: 6 for PolyBench, 10 for others)
     n_candidates: int = 3        # N (paper: 3 / 5)
-    r: int = 30                  # R repeated runs
+    r: int = 30                  # R repeated runs — the eq. 3 cap
     k: int = 3                   # trim k
     improve_eps: float = 0.01    # stop when round gain < 1%
     fe_input_sets: int = 2
     fe_scale: Optional[int] = None   # None → MEP scale
     check_pallas: bool = False       # also interpret-check the Pallas build
+    # adaptive measurement knobs (None → engine defaults: CI-stopped
+    # reps under the R cap, incumbent racing on); the campaign fills in
+    # the cross-process timing lease path
+    measure: Optional[MeasureConfig] = None
 
     def to_dict(self) -> Dict[str, Any]:
-        return asdict(self)
+        return asdict(self)            # nested MeasureConfig → plain dict
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "OptConfig":
+        d = dict(d)
+        if isinstance(d.get("measure"), dict):
+            d["measure"] = MeasureConfig.from_dict(d["measure"])
         return OptConfig(**d)
 
 
@@ -64,13 +72,21 @@ class CandidateLog:
     repairs: int = 0
     error: str = ""
     cached: bool = False         # served from the shared EvalCache
+    # adaptive-engine provenance: reps actually spent under the eq. 3
+    # cap, the CI half-width achieved, and whether incumbent racing
+    # aborted the timing (a raced-out candidate is a loss by
+    # construction and is excluded from the round argmin)
+    reps: int = 0
+    ci_half_width_s: float = 0.0
+    raced_out: bool = False
+    lower_bound_s: float = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "CandidateLog":
-        d = dict(d)
+        d = {k: v for k, v in d.items() if v is not None}
         d["time_s"] = _de_none(d.get("time_s", float("inf")))
         return CandidateLog(**d)
 
@@ -112,10 +128,22 @@ class OptResult:
     stop_reason: str = ""
     cache_hits: int = 0
     cache_misses: int = 0
+    # measurement economics (adaptive engine): wall-clock reps actually
+    # paid vs what fixed-R would have paid for the same timings, plus
+    # how many candidates incumbent racing retired early
+    timing_reps: int = 0
+    timing_reps_fixed: int = 0
+    raced_out: int = 0
 
     @property
     def speedup(self) -> float:
         return self.baseline_time_s / self.best_time_s if self.best_time_s else 0.0
+
+    @property
+    def rep_savings(self) -> float:
+        """fixed-R reps ÷ reps paid (1.0 → no savings)."""
+        return self.timing_reps_fixed / self.timing_reps \
+            if self.timing_reps else 1.0
 
     def to_dict(self, *, full: bool = False) -> Dict[str, Any]:
         """Summary record for journals (default), or — with ``full`` — the
@@ -130,6 +158,9 @@ class OptResult:
             "rounds": len(self.rounds), "aer_records": self.aer_records,
             "wall_s": self.wall_s, "stop_reason": self.stop_reason,
             "cache_hits": self.cache_hits, "cache_misses": self.cache_misses,
+            "timing_reps": self.timing_reps,
+            "timing_reps_fixed": self.timing_reps_fixed,
+            "raced_out": self.raced_out,
         }
         if full:
             d["baseline_variant"] = self.baseline_variant
@@ -153,7 +184,10 @@ class OptResult:
             wall_s=float(d.get("wall_s", 0.0)),
             stop_reason=d.get("stop_reason", ""),
             cache_hits=int(d.get("cache_hits", 0)),
-            cache_misses=int(d.get("cache_misses", 0)))
+            cache_misses=int(d.get("cache_misses", 0)),
+            timing_reps=int(d.get("timing_reps", 0)),
+            timing_reps_fixed=int(d.get("timing_reps_fixed", 0)),
+            raced_out=int(d.get("raced_out", 0)))
         return res
 
 
@@ -167,7 +201,8 @@ class Evaluator:
     def __init__(self, mep: MEP, case: KernelCase, platform_name: str,
                  aer: AER, proposer: Proposer, cfg: OptConfig,
                  cache: Optional[EvalCache] = None,
-                 measured: bool = False):
+                 measured: bool = False,
+                 measure_cfg: Optional[MeasureConfig] = None):
         self.mep = mep
         self.case = case
         self.platform_name = platform_name
@@ -177,45 +212,103 @@ class Evaluator:
         self.cache = cache
         # wall-clock platforms → cached records are namespace/TTL-guarded
         self.measured = measured
+        # resolved adaptive-engine config (lease path filled in by the
+        # campaign); None → engine defaults
+        self.measure_cfg = measure_cfg if measure_cfg is not None \
+            else cfg.measure
         self.hits = 0
         self.misses = 0
+        # measurement economics: reps actually paid vs the fixed-R bill
+        self.timing_reps = 0
+        self.timing_reps_fixed = 0
+        self.raced = 0
 
     # ------------------------------------------------------------------
+    def _time(self, variant: Variant,
+              incumbent_s: Optional[float]) -> TimingResult:
+        """One eq. 3 timing through the adaptive engine, with the rep
+        ledger updated."""
+        t = self.mep.measure(variant, r=self.cfg.r, k=self.cfg.k,
+                             budget=self.measure_cfg,
+                             incumbent_s=incumbent_s)
+        self.timing_reps += t.r
+        # an analytic (deterministic) timing never paid R real reps under
+        # fixed-R either — it computed the model once and padded — so it
+        # contributes no claimed savings to the ledger
+        self.timing_reps_fixed += t.r if t.deterministic \
+            else (t.r_cap or self.cfg.r)
+        if t.raced_out:
+            self.raced += 1
+        return t
+
+    @staticmethod
+    def _timing_fields(t: TimingResult) -> Dict[str, Any]:
+        return {"reps": t.r, "r_cap": t.r_cap,
+                "ci_half_width_s": t.ci_half_width_s,
+                "raced_out": t.raced_out,
+                "lower_bound_s": t.lower_bound_s}
+
     def measure_baseline(self, variant: Variant) -> float:
-        """Timing-only measurement (no FE) of an already-trusted variant."""
+        """Timing-only measurement (no FE) of an already-trusted variant.
+        The baseline IS the incumbent, so racing never applies here."""
         if self.cache is None:
-            return self.mep.measure(variant, r=self.cfg.r,
-                                    k=self.cfg.k).trimmed_mean_s
+            return self._time(variant, None).trimmed_mean_s
 
         def compute() -> EvalRecord:
-            t = self.mep.measure(variant, r=self.cfg.r,
-                                 k=self.cfg.k).trimmed_mean_s
-            return EvalRecord(status="ok", time_s=t,
-                              final_variant=dict(variant))
+            t = self._time(variant, None)
+            return EvalRecord(status="ok", time_s=t.trimmed_mean_s,
+                              final_variant=dict(variant),
+                              **self._timing_fields(t))
 
         rec, hit = self.cache.get_or_compute(self._spec(variant, "measure"),
                                              compute,
-                                             measured=self.measured)
+                                             measured=self.measured,
+                                             accept=self._accept(None))
         self._count(hit)
         return rec.time_s
 
-    def evaluate(self, variant: Variant) -> CandidateLog:
+    def _accept(self, incumbent_s: Optional[float]):
+        """Cached-record validity in this evaluation's context: a full
+        timing always replays; a raced-out partial timing replays only
+        while its optimistic lower bound still loses to the *current*
+        incumbent — otherwise the candidate might now win and must be
+        re-measured (the fresh record replaces the stale one)."""
+        def accept(rec: EvalRecord) -> bool:
+            if not rec.raced_out:
+                return True
+            return incumbent_s is not None \
+                and rec.lower_bound_s > incumbent_s
+        return accept
+
+    def evaluate(self, variant: Variant,
+                 incumbent_s: Optional[float] = None) -> CandidateLog:
+        """Build → FE → time one candidate.  ``incumbent_s`` (the search
+        loop's current best) arms incumbent racing: timing aborts once
+        the candidate provably cannot win the round."""
         if self.cache is None:
-            return self._evaluate_uncached(variant)
+            return self._evaluate_uncached(variant, incumbent_s)
 
         def compute() -> EvalRecord:
-            cl = self._evaluate_uncached(variant)
+            cl = self._evaluate_uncached(variant, incumbent_s)
             return EvalRecord(status=cl.status, time_s=cl.time_s,
                               fe_abs_err=cl.fe_abs_err, repairs=cl.repairs,
-                              error=cl.error, final_variant=dict(cl.variant))
+                              error=cl.error, final_variant=dict(cl.variant),
+                              reps=cl.reps, r_cap=self.cfg.r,
+                              ci_half_width_s=cl.ci_half_width_s,
+                              raced_out=cl.raced_out,
+                              lower_bound_s=cl.lower_bound_s)
 
         rec, hit = self.cache.get_or_compute(self._spec(variant, "eval"),
                                              compute,
-                                             measured=self.measured)
+                                             measured=self.measured,
+                                             accept=self._accept(incumbent_s))
         self._count(hit)
         return CandidateLog(dict(rec.final_variant), rec.status, rec.time_s,
                             fe_abs_err=rec.fe_abs_err, repairs=rec.repairs,
-                            error=rec.error, cached=hit)
+                            error=rec.error, cached=hit, reps=rec.reps,
+                            ci_half_width_s=rec.ci_half_width_s,
+                            raced_out=rec.raced_out,
+                            lower_bound_s=rec.lower_bound_s)
 
     # ------------------------------------------------------------------
     def _spec(self, variant: Variant, kind: str) -> Dict[str, Any]:
@@ -226,6 +319,11 @@ class Evaluator:
         params: Dict[str, Any] = {"r": cfg.r, "k": cfg.k,
                                   "seed": self.mep.seed,
                                   "src": self.case.source_digest()}
+        # the adaptive stopping policy changes how many reps back a
+        # timing, so it is part of the record's identity (racing and the
+        # lease are NOT: racing truncation is carried by the raced_out
+        # flag + accept predicate, the lease only schedules)
+        params["measure"] = (self.measure_cfg or MeasureConfig()).cache_key()
         if kind == "eval":
             # a full evaluation embeds repair outcomes, so the repair
             # policy is part of the key (AER-only proposers share it)
@@ -243,7 +341,9 @@ class Evaluator:
         else:
             self.misses += 1
 
-    def _evaluate_uncached(self, variant: Variant) -> CandidateLog:
+    def _evaluate_uncached(self, variant: Variant,
+                           incumbent_s: Optional[float] = None
+                           ) -> CandidateLog:
         mep, case, cfg = self.mep, self.case, self.cfg
         v = dict(variant)
         repairs = 0
@@ -265,9 +365,13 @@ class Evaluator:
                         raise FloatingPointError(
                             f"FE(pallas) violation: {rp.detail}")
                 stage = "run"
-                t = mep.measure(v, r=cfg.r, k=cfg.k)
+                t = self._time(v, incumbent_s)
                 return CandidateLog(v, "ok", t.trimmed_mean_s,
-                                    fe_abs_err=r.max_abs_err, repairs=repairs)
+                                    fe_abs_err=r.max_abs_err, repairs=repairs,
+                                    reps=t.r,
+                                    ci_half_width_s=t.ci_half_width_s,
+                                    raced_out=t.raced_out,
+                                    lower_bound_s=t.lower_bound_s)
             except Exception as e:  # noqa: BLE001 — every failure goes to AER
                 err = f"{type(e).__name__}: {e}"
                 fixed = self.proposer.repair(case, v, err) \

@@ -2,7 +2,11 @@
 
 Eq. 3 of the paper: each candidate is run R times, the R measurements are
 sorted, the lowest and highest k are discarded, and the rest averaged
-(trimmed mean) to suppress system noise.
+(trimmed mean) to suppress system noise.  The measurement loop itself
+lives in ``repro.core.measure``: R is the *cap*, and the adaptive engine
+stops early once the trimmed mean's CI half-width converges (or the
+candidate provably loses to the incumbent); ``wallclock`` below is the
+legacy fixed-R entry point.
 
 Two platforms mirror the paper's NVIDIA/DCU pair (DESIGN.md §3):
 
@@ -17,7 +21,6 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -33,12 +36,28 @@ from repro.launch import mesh as hw
 class TimingResult:
     trimmed_mean_s: float
     times_s: List[float]
-    r: int
-    k: int
+    r: int                        # reps actually collected
+    k: int                        # trim actually applied (effective k)
+    ci_half_width_s: float = 0.0  # normal-CI half-width of the trimmed mean
+    r_cap: int = 0                # eq. 3 cap in force (0 → legacy/unknown)
+    raced_out: bool = False       # aborted: lower bound lost to incumbent
+    deterministic: bool = False   # analytic timer, single rep is exact
 
     @property
     def raw_mean_s(self) -> float:
         return float(np.mean(self.times_s))
+
+    @property
+    def ci_rel(self) -> float:
+        """CI half-width relative to the trimmed mean."""
+        return self.ci_half_width_s / self.trimmed_mean_s \
+            if self.trimmed_mean_s else 0.0
+
+    @property
+    def lower_bound_s(self) -> float:
+        """Optimistic lower bound: the best observed rep minus the CI
+        half-width — what incumbent racing compares against."""
+        return min(self.times_s) - self.ci_half_width_s
 
 
 def trimmed_mean(times: Sequence[float], k: int) -> float:
@@ -53,16 +72,16 @@ def trimmed_mean(times: Sequence[float], k: int) -> float:
 
 def wallclock(fn: Callable, inputs, *, r: int, k: int,
               warmup: int = 1) -> TimingResult:
-    for _ in range(warmup):
-        out = fn(*inputs)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(r):
-        t0 = time.perf_counter()
-        out = fn(*inputs)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return TimingResult(trimmed_mean(times, k), times, r, k)
+    """Fixed-R eq. 3 wall-clock (legacy entry point).  The measurement
+    loop itself lives in ``repro.core.measure``; this wrapper pins the
+    engine to the non-adaptive path so existing callers keep the exact
+    R-rep behaviour.  Each warmup call blocks on its own output (a
+    deferred compile must not leak into the first timed rep), and
+    ``warmup=0`` is supported."""
+    from repro.core.measure import MeasureConfig, measure_fn
+    return measure_fn(fn, inputs, r=r, k=k,
+                      cfg=MeasureConfig(adaptive=False, race=False,
+                                        warmup=warmup))
 
 
 # --------------------------------------------------------------------------
@@ -123,13 +142,23 @@ def platform_from_name(name: str) -> "Platform":
 
 class Platform:
     name: str = "abstract"
-    # True → timing is analytic/deterministic, so a campaign may evaluate
-    # this platform's candidates from concurrent workers.  Measured
-    # platforms must stay False: parallel wall-clocking corrupts eq. 3.
+    # True → timing is analytic/deterministic: candidates can be timed
+    # from concurrent workers with no coordination at all.  Measured
+    # (wall-clock) platforms stay False, which routes their timing
+    # through the measurement engine's timing lease — only the short
+    # wall-clock slices serialize (process-wide mutex + cross-process
+    # flock arbiter), so measured campaigns still fan out across
+    # threads and worker processes.
     concurrency_safe: bool = False
 
     def time_variant(self, case: KernelCase, variant: Variant, scale: int,
-                     inputs, *, r: int, k: int) -> TimingResult:
+                     inputs, *, r: int, k: int,
+                     budget: Optional["MeasureConfig"] = None,
+                     incumbent_s: Optional[float] = None) -> TimingResult:
+        """Eq. 3 timing.  ``r`` is the rep cap, ``k`` the trim count;
+        ``budget`` (a ``repro.core.measure.MeasureConfig``) enables the
+        adaptive engine's CI-based early stop and carries the timing
+        lease, and ``incumbent_s`` arms incumbent racing."""
         raise NotImplementedError
 
     def profile_feedback(self, case: KernelCase, variant: Variant,
@@ -165,9 +194,12 @@ class CPUPlatform(Platform):
             self._cache.put(key, fn)
         return fn
 
-    def time_variant(self, case, variant, scale, inputs, *, r, k):
+    def time_variant(self, case, variant, scale, inputs, *, r, k,
+                     budget=None, incumbent_s=None):
+        from repro.core.measure import measure_fn
         fn = self._compiled(case, variant)
-        return wallclock(fn, inputs, r=r, k=k)
+        return measure_fn(fn, inputs, r=r, k=k, cfg=budget,
+                          incumbent_s=incumbent_s)
 
 
 class TPUModelPlatform(Platform):
@@ -187,7 +219,8 @@ class TPUModelPlatform(Platform):
         self.peak_flops = peak_flops
         self.hbm_bw = hbm_bw
 
-    def time_variant(self, case, variant, scale, inputs, *, r, k):
+    def time_variant(self, case, variant, scale, inputs, *, r, k,
+                     budget=None, incumbent_s=None):
         fl = case.flops(scale)
         tb = case.generic_traffic(variant, scale)
         # dtype strategy: fp32 accumulate with bf16 storage halves traffic
@@ -201,8 +234,12 @@ class TPUModelPlatform(Platform):
         util = variant_mxu_utilization(variant)
         t = (max(fl_t / util, mem_t) + self.LAUNCH_OVERHEAD_S
              + case.variant_latency(variant, scale))
-        times = [t] * max(r, 2 * k + 1)
-        return TimingResult(trimmed_mean(times, k), times, len(times), k)
+        # the model is a pure function of (variant, scale): one rep IS
+        # the distribution — no synthetic [t]*R padding, zero CI width,
+        # flagged deterministic so consumers can tell it apart from a
+        # measured single rep
+        return TimingResult(t, [t], 1, 0, ci_half_width_s=0.0,
+                            r_cap=max(1, int(r)), deterministic=True)
 
     def profile_feedback(self, case, variant, scale):
         fb = super().profile_feedback(case, variant, scale)

@@ -18,12 +18,16 @@ the *scheduler's process* too.  A campaign hands its ``CaseJob``s to an
   worker processes mid-campaign), and the ``ResultsDB`` journal (atomic
   O_APPEND lines) are the only shared state, so the same code path
   scales to remote hosts over shared storage.
-* ``LocalClusterExecutor`` — multiplexes N persistent subprocess workers
-  with per-worker platform pinning: measured (wall-clock) platforms get
-  one *exclusive* worker each (parallel timing would corrupt the paper's
-  eq. 3 trimmed mean), while analytic platforms fan out over the general
-  pool.  Workers persist across campaigns, amortizing spawn cost for the
-  serving autotuner's repeated cycles.
+* ``LocalClusterExecutor`` — multiplexes N persistent subprocess
+  workers.  Workers persist across campaigns, amortizing spawn cost for
+  the serving autotuner's repeated cycles.
+
+Measured (wall-clock) platforms fan out across workers like analytic
+ones: every spec carries the campaign's **timing lease** (an flock'd
+arbiter file, ``repro.core.measure.TimingLease``) and only the short
+wall-clock slices serialize on it — build/compile/FE/LLM work overlaps
+freely — so eq. 3's trimmed mean stays clean without the one-exclusive-
+worker pinning this executor used to apply.
 
 Process-level crashes and timeouts are folded into the AER taxonomy as
 ``WorkerFault`` (kind crash|timeout) with automatic worker replacement:
@@ -53,6 +57,8 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.aer import AER, WorkerFault
 from repro.core.evalcache import EvalCache, ResultsDB, json_safe
 from repro.core.kernelcase import KernelCase
+from repro.core.measure import (MeasureConfig, default_lease_path,
+                                resolve_lease)
 from repro.core.mep import MEP, MEPConstraints, build_mep
 from repro.core.optimizer import Evaluator, OptConfig, OptResult, RoundLog
 from repro.core.patterns import Pattern, PatternStore
@@ -87,6 +93,11 @@ class WorkerContext:
     patterns: Optional[PatternStore] = None
     db: Optional[ResultsDB] = None
     verbose: bool = False
+    # campaign-level default measurement policy (per-job cfg.measure
+    # wins) and the cross-process timing lease file shared by every
+    # worker timing this campaign's wall-clock sections
+    measure: Optional[MeasureConfig] = None
+    lease_path: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -101,21 +112,33 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                  stop_event: Optional[threading.Event] = None,
                  verbose: bool = False,
                  mep: Optional[MEP] = None,
-                 scale: Optional[int] = None) -> OptResult:
+                 scale: Optional[int] = None,
+                 measure: Optional[MeasureConfig] = None,
+                 lease_path: Optional[str] = None) -> OptResult:
     """Round loop (eq. 5): propose → evaluate (build→FE→time, AER-wrapped,
     cache-served) → argmin, with the uniform early stop.  Serial per
-    case; concurrency happens across cases, in whichever executor."""
+    case; concurrency happens across cases, in whichever executor —
+    measured platforms included, because wall-clock sections serialize
+    on the campaign's timing lease (``lease_path``), not on worker
+    exclusivity."""
     t_start = time.time()
     case, proposer, cfg = job.case, job.proposer, job.cfg
+    # measurement policy: per-job cfg wins over the campaign default;
+    # the campaign's lease path is folded in either way
+    mcfg = resolve_lease(cfg.measure or measure, lease_path)
     if mep is None:
+        # the auto-sizing probes carry the lease too: a worker's probe
+        # must not wall-clock over another worker's leased eq. 3 slices
         mep = job.mep or build_mep(case, platform,
                                    constraints=job.constraints,
-                                   seed=job.seed, scale=scale)
+                                   seed=job.seed, scale=scale,
+                                   budget=mcfg)
     aer = AER(case, mep.scale)
     evaluator = Evaluator(mep, case, platform.name, aer, proposer,
                           cfg, cache=cache,
                           measured=not getattr(platform,
-                                               "concurrency_safe", False))
+                                               "concurrency_safe", False),
+                          measure_cfg=mcfg)
 
     baseline_v = dict(case.baseline_variant)
     t_base = evaluator.measure_baseline(baseline_v)
@@ -148,19 +171,31 @@ def run_case_job(job: CaseJob, platform: Platform, *,
         cands = proposer.propose(case, state, cfg.n_candidates)
         rl = RoundLog(round=d, baseline_time_s=best_t)
         for v in cands:
-            cl = evaluator.evaluate(v)
+            # the current best is the incumbent: timing a candidate
+            # aborts once its optimistic lower bound provably loses
+            cl = evaluator.evaluate(v, incumbent_s=best_t)
             rl.candidates.append(cl)
+            # raced_out is marked in the proposer-visible history too: a
+            # truncated trimmed mean must not read as a near-miss full
+            # measurement when later rounds steer proposals
             history.append({"variant": cl.variant, "time_s": cl.time_s,
-                            "status": cl.status})
+                            "status": cl.status,
+                            "raced_out": cl.raced_out})
             if cl.status != "ok":
                 errors.append(cl.error)
-        feasible = [c for c in rl.candidates if c.status == "ok"]
+        # a raced-out candidate is a loss by construction (its partial
+        # trimmed mean is not a full eq. 3 measurement): it never enters
+        # the argmin, so it can never become a winner
+        feasible = [c for c in rl.candidates
+                    if c.status == "ok" and not c.raced_out]
+        raced = [c for c in rl.candidates if c.raced_out]
         # eq. 5 argmin + uniform early stop: ANY round (round 0
         # included) that fails to improve by > eps ends the loop,
         # with the reason logged.
         stop = ""
         if not feasible:
-            stop = "no feasible candidates"
+            stop = ("all candidates raced out (none can beat the "
+                    "incumbent)") if raced else "no feasible candidates"
         else:
             winner = min(feasible, key=lambda c: c.time_s)
             rl.best_time_s = winner.time_s
@@ -193,7 +228,10 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                             "gain": p.gain, "pid": p.pid}
                            for p in hints or []],
                 candidates=[{"variant": c.variant, "status": c.status,
-                             "time_s": c.time_s, "cached": c.cached}
+                             "time_s": c.time_s, "cached": c.cached,
+                             "reps": c.reps,
+                             "ci_half_width_s": c.ci_half_width_s,
+                             "raced_out": c.raced_out}
                             for c in rl.candidates])
         if stop:
             res.mep_log.append(f"round {d}: stopped ({stop})")
@@ -205,6 +243,16 @@ def run_case_job(job: CaseJob, platform: Platform, *,
     res.best_variant, res.best_time_s = best_v, best_t
     res.aer_records = len(aer.records)
     res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
+    res.timing_reps = evaluator.timing_reps
+    res.timing_reps_fixed = evaluator.timing_reps_fixed
+    res.raced_out = evaluator.raced
+    if evaluator.timing_reps and \
+            evaluator.timing_reps < evaluator.timing_reps_fixed:
+        res.mep_log.append(
+            f"measurement: {evaluator.timing_reps} reps paid vs "
+            f"{evaluator.timing_reps_fixed} fixed-R "
+            f"({res.rep_savings:.2f}x savings, "
+            f"{evaluator.raced} raced out)")
     res.wall_s = time.time() - t_start
     if patterns is not None:
         patterns.record(case, platform.name, baseline_v, best_v,
@@ -232,6 +280,17 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
         raise ValueError(
             "subprocess executors need a file-backed EvalCache (or none): "
             "an in-memory cache cannot be shared across processes")
+    # cross-process timing lease: every worker timing this campaign's
+    # wall-clock sections must serialize on the same arbiter file.  The
+    # campaign provides one (next to its cache); for direct executor
+    # users the same rule is re-derived here, campaign-scoped — a
+    # measured platform must never fan out lease-less.
+    lease = ctx.lease_path
+    if lease is None and not getattr(ctx.platform, "concurrency_safe",
+                                     False):
+        lease = default_lease_path(
+            ctx.cache.path if ctx.cache is not None else None,
+            scope=campaign_id)
     return {
         "job": {
             "case": job.case.to_dict(),
@@ -254,6 +313,8 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
         "patterns": ctx.patterns.to_spec()
         if ctx.patterns is not None and ctx.patterns.path else None,
         "db": ctx.db.path if ctx.db else None,
+        "measure": ctx.measure.to_dict() if ctx.measure else None,
+        "lease": lease,
         "campaign": campaign_id,
         "verbose": ctx.verbose,
         "stop": False,
@@ -307,18 +368,20 @@ class InProcessExecutor(Executor):
         self._meps: Dict[Tuple, MEP] = {}
 
     # ------------------------------------------------------------------
-    def _get_mep(self, job: CaseJob, platform: Platform) -> MEP:
+    def _get_mep(self, job: CaseJob, ctx: WorkerContext) -> MEP:
         # a pre-built MEP may be pinned to a non-default (e.g. observed
         # traffic) scale, so its scale is part of the dedup identity
-        key = (job.case.name, platform.name, job.seed, job.constraints,
+        key = (job.case.name, ctx.platform.name, job.seed, job.constraints,
                job.mep.scale if job.mep else None)
         with self._mep_lock:
             lk = self._mep_locks.setdefault(key, threading.Lock())
         with lk:
             if key not in self._meps:
                 self._meps[key] = job.mep or build_mep(
-                    job.case, platform, constraints=job.constraints,
-                    seed=job.seed)
+                    job.case, ctx.platform, constraints=job.constraints,
+                    seed=job.seed,
+                    budget=resolve_lease(job.cfg.measure or ctx.measure,
+                                         ctx.lease_path))
             return self._meps[key]
 
     def _attach_batcher(self, jobs: List[CaseJob]) -> Optional[LLMBatcher]:
@@ -341,11 +404,12 @@ class InProcessExecutor(Executor):
 
         def guarded(job: CaseJob):
             try:
-                mep = self._get_mep(job, ctx.platform)
+                mep = self._get_mep(job, ctx)
                 return run_case_job(
                     job, ctx.platform, campaign_id=campaign_id,
                     cache=ctx.cache, patterns=ctx.patterns, db=ctx.db,
-                    stop_event=stop, verbose=ctx.verbose, mep=mep)
+                    stop_event=stop, verbose=ctx.verbose, mep=mep,
+                    measure=ctx.measure, lease_path=ctx.lease_path)
             except Exception as e:  # noqa: BLE001 — isolate job failures
                 return e
             finally:
@@ -472,10 +536,6 @@ class SubprocessExecutor(Executor):
 
     def __init__(self, workers: Optional[int] = None, *,
                  timeout_s: Optional[float] = None, retries: int = 1):
-        # an explicit width is the caller's deliberate choice (mirrors
-        # Campaign(max_workers=...) overriding the measured clamp); a
-        # policy-derived width must still clamp measured platforms
-        self._explicit_width = workers is not None
         if workers is None:
             workers = int(os.environ.get(
                 "REPRO_CAMPAIGN_WORKERS", str(os.cpu_count() or 2)))
@@ -491,13 +551,12 @@ class SubprocessExecutor(Executor):
         self._slot_locks: Dict[Any, threading.Lock] = {}
         self._lock = threading.Lock()
 
-    # -- overridable routing (LocalClusterExecutor pins measured slots) --
+    # -- overridable routing hook (kept for custom executors) --
     def _slots_for(self, ctx: WorkerContext, n_jobs: int) -> List[Any]:
-        if not getattr(ctx.platform, "concurrency_safe", False) \
-                and not self._explicit_width:
-            # measured wall-clock platform on a policy-sized fabric:
-            # concurrent timing would corrupt eq. 3's trimmed mean
-            return [0]
+        # measured platforms fan out like analytic ones: their
+        # wall-clock sections serialize on the campaign's cross-process
+        # timing lease (job_to_spec guarantees every spec carries one),
+        # so worker exclusivity is no longer needed to protect eq. 3
         return list(range(min(self.workers, max(1, n_jobs))))
 
     def _slot_lock(self, slot: Any) -> threading.Lock:
@@ -660,24 +719,16 @@ class SubprocessExecutor(Executor):
 
 
 class LocalClusterExecutor(SubprocessExecutor):
-    """N persistent subprocess workers with per-worker platform pinning:
-    a measured (wall-clock) platform is routed to ONE exclusive worker
-    slot — reserved for that platform name, jobs serialized on it, so
-    co-running evaluations can't pollute eq. 3 timing — while analytic
-    platforms fan out across the remaining general slots.  Workers stay
-    alive across ``run`` calls (campaign after campaign), so repeated
-    autotune cycles don't re-pay interpreter+jax startup."""
+    """N persistent subprocess workers.  Workers stay alive across
+    ``run`` calls (campaign after campaign), so repeated autotune cycles
+    don't re-pay interpreter+jax startup.  Measured (wall-clock)
+    platforms fan out across the whole pool — the pinned exclusive slot
+    they used to get is gone; the cross-process timing lease serializes
+    only the wall-clock slices while build/compile/FE/LLM work overlaps
+    freely."""
 
     name = "local-cluster"
     persistent = True
-
-    def _slots_for(self, ctx, n_jobs):
-        if getattr(ctx.platform, "concurrency_safe", False):
-            # analytic: fan out over the general (integer) slots
-            return list(range(min(self.workers, max(1, n_jobs))))
-        # measured: one exclusive worker, pinned to the platform name —
-        # a distinct slot namespace, so it never co-runs analytic jobs
-        return [f"pin:{ctx.platform.name}"]
 
 
 def make_executor(kind: Optional[str], *, workers: Optional[int] = None,
@@ -774,11 +825,14 @@ def worker_main() -> int:
             stop_event = threading.Event()
             if spec.get("stop"):
                 stop_event.set()
+            measure = MeasureConfig.from_dict(spec["measure"]) \
+                if spec.get("measure") else None
             res = run_case_job(
                 job, platform, campaign_id=spec.get("campaign", ""),
                 cache=cache, patterns=patterns, db=db,
                 stop_event=stop_event,
-                verbose=spec.get("verbose", False), scale=scale)
+                verbose=spec.get("verbose", False), scale=scale,
+                measure=measure, lease_path=spec.get("lease"))
             reply = {"ok": True, "result": res.to_dict(full=True)}
         except Exception as e:  # noqa: BLE001 — job errors go to scheduler
             import traceback

@@ -46,6 +46,7 @@ from repro.core.campaign import Campaign, CaseJob
 from repro.core.evalcache import EvalCache, ResultsDB
 from repro.core.integrate import GuardedInstall, guarded_install
 from repro.core.kernelcase import KernelCase, cases
+from repro.core.measure import MeasureConfig
 from repro.core.mep import MEPConstraints, build_mep
 from repro.core.optimizer import OptConfig, OptResult
 from repro.core.patterns import PatternStore
@@ -80,6 +81,11 @@ class AutotuneConfig:
     # path): campaign wins survive restarts and — because the store is
     # multi-process safe — flow to out-of-process campaign workers
     patterns: Optional[str] = None
+    # adaptive measurement policy (None → engine defaults: CI-stopped
+    # reps under the eq. 3 R cap + incumbent racing); the campaign adds
+    # the cross-process timing lease, so measured platforms fan out
+    # across autotune workers
+    measure: Optional[MeasureConfig] = None
 
 
 def snap_scale(case: KernelCase, observed: int) -> int:
@@ -263,7 +269,8 @@ class ServeAutotuner:
                 mep=mep, label=f"autotune:{site}@{scale}"))
         camp = Campaign(self.platform, patterns=self.patterns,
                         cache=self.cache, db=self.db, verbose=self.verbose,
-                        executor=self._executor, max_workers=cfg.workers)
+                        executor=self._executor, max_workers=cfg.workers,
+                        measure=cfg.measure)
         rep.results = camp.run(jobs, stop=self._stop)
         for (site, scale), res in zip(rep.hot.items(), rep.results):
             # an interrupted job stays un-tuned so the next cycle resumes

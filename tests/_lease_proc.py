@@ -1,0 +1,61 @@
+"""Child-process driver for the two-process timing-lease contention
+test.  Loads ``repro.core.measure`` straight from its file (stub
+package, no jax import), so the children start in milliseconds and
+genuinely overlap while hammering the lease.
+
+    python tests/_lease_proc.py <lease_path> <log_path> <tag> <n_slices>
+
+Each slice appends ``enter <tag>`` / ``exit <tag>`` tokens around a
+short critical section (single O_APPEND writes); the parent asserts
+the tokens never interleave across processes.
+"""
+import importlib.util
+import os
+import sys
+import time
+import types
+
+
+def load_measure():
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src", "repro", "core")
+    pkg = types.ModuleType("repro")
+    pkg.__path__ = []
+    core = types.ModuleType("repro.core")
+    core.__path__ = []
+    kc = types.ModuleType("repro.core.kernelcase")
+    kc.Variant = dict
+    sys.modules.update({"repro": pkg, "repro.core": core,
+                        "repro.core.kernelcase": kc})
+    # the lease's flock discipline is evalcache.FileLock: load it first
+    for name in ("evalcache", "measure"):
+        spec = importlib.util.spec_from_file_location(
+            f"repro.core.{name}", os.path.join(src, f"{name}.py"))
+        mod = importlib.util.module_from_spec(spec)
+        sys.modules[f"repro.core.{name}"] = mod
+        spec.loader.exec_module(mod)
+    return sys.modules["repro.core.measure"]
+
+
+def main() -> int:
+    measure = load_measure()
+    lease_path, log_path, tag, n = (sys.argv[1], sys.argv[2], sys.argv[3],
+                                    int(sys.argv[4]))
+    lease = measure.TimingLease(lease_path)
+
+    def token(kind: str) -> None:
+        fd = os.open(log_path, os.O_WRONLY | os.O_APPEND | os.O_CREAT,
+                     0o644)
+        os.write(fd, f"{kind} {tag}\n".encode())
+        os.close(fd)
+
+    for _ in range(n):
+        with lease.slice_():
+            token("enter")
+            time.sleep(0.002)          # the "wall-clock slice"
+            token("exit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

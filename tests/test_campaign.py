@@ -276,10 +276,19 @@ def test_cpu_platform_compiled_cache_is_bounded():
     assert key_last in plat._cache and key_first not in plat._cache
 
 
-def test_measured_platform_clamps_workers():
-    assert Campaign(CPUPlatform()).max_workers == 1
+def test_measured_platform_fans_out_under_timing_lease(tmp_path):
+    """The one-worker clamp for measured platforms is gone: wall-clock
+    slices serialize on the campaign's timing lease instead.  The lease
+    lives next to the eval cache when there is one, else in a
+    campaign-scoped temp file; analytic platforms need none."""
+    assert Campaign(CPUPlatform()).max_workers > 1
     assert Campaign(TPUModelPlatform()).max_workers > 1
     assert Campaign(CPUPlatform(), max_workers=3).max_workers == 3
+    cache = EvalCache(str(tmp_path / "ec.jsonl"))
+    assert Campaign(CPUPlatform(), cache=cache).lease_path \
+        == cache.path + ".timelease"
+    assert Campaign(CPUPlatform()).lease_path            # tempdir fallback
+    assert Campaign(TPUModelPlatform()).lease_path is None
 
 
 # ------------------------------------------------------- early stopping ---

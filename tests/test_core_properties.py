@@ -168,3 +168,87 @@ def test_journal_replay_is_order_insensitive(tmp_path_factory, data, seed):
                 ((p.merge_key(), p) for p in store.patterns)}
 
     assert merged_view(lines, "a") == merged_view(shuffled, "b")
+
+
+# ------------------------------------------- adaptive measurement engine --
+from repro.core.measure import (MeasureConfig, effective_k,  # noqa: E402
+                                measure_callable, trimmed_stats)
+
+
+def _noise_samples(mean, noise, seed, n):
+    rng = random.Random(seed)
+    return [mean * (1.0 + rng.uniform(-noise, noise)) for _ in range(n)]
+
+
+@given(st.lists(st.floats(min_value=1e-4, max_value=1e2,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=40),
+       st.integers(min_value=0, max_value=4))
+@settings(max_examples=100, deadline=None)
+def test_trimmed_stats_matches_eq3_on_partial_samples(times, k):
+    """trimmed_stats degrades k to what the sample affords and must
+    agree with the eq. 3 trimmed mean at that effective k."""
+    mean, hw, ke = trimmed_stats(times, k, 1.96)
+    assert ke == effective_k(len(times), k)
+    assert len(times) > 2 * ke                   # eq. 3 precondition holds
+    assert mean == pytest.approx(trimmed_mean(times, ke), rel=1e-9)
+    assert hw >= 0.0
+    # permutation invariant, like the trimmed mean itself
+    m2, h2, k2 = trimmed_stats(list(reversed(times)), k, 1.96)
+    assert (m2, h2, k2) == (pytest.approx(mean), pytest.approx(hw), ke)
+
+
+@given(st.integers(min_value=2, max_value=4),      # candidate count
+       st.floats(min_value=0.0, max_value=0.02),   # relative noise
+       st.integers(min_value=0, max_value=2**31))  # stream seed
+@settings(max_examples=60, deadline=None)
+def test_adaptive_stopping_preserves_fixed_r_winner(n_cands, noise, seed):
+    """On synthetic noise distributions whose means are separated by
+    more than the noise + CI widths, CI-based early stopping and
+    incumbent racing must pick the same argmin a full fixed-R=30 sweep
+    picks — and the raced-out losers must be losers under fixed-R too."""
+    r_cap, k = 30, 3
+    means = [1.0 * (1.3 ** i) for i in range(n_cands)]   # ≥30% separation
+    random.Random(seed).shuffle(means)
+    streams = [_noise_samples(m, noise, (seed, i), r_cap)
+               for i, m in enumerate(means)]
+
+    fixed = [trimmed_mean(s, k) for s in streams]
+    fixed_winner = fixed.index(min(fixed))
+
+    # sequential search-loop semantics: the incumbent is the best
+    # adaptive mean seen so far; raced-out candidates are losses
+    incumbent = None
+    adaptive = []
+    for s in streams:
+        res = measure_callable(iter(s).__next__, r=r_cap, k=k,
+                               incumbent_s=incumbent)
+        adaptive.append(res)
+        if not res.raced_out and (incumbent is None
+                                  or res.trimmed_mean_s < incumbent):
+            incumbent = res.trimmed_mean_s
+    feasible = [i for i, res in enumerate(adaptive) if not res.raced_out]
+    winner = min(feasible, key=lambda i: adaptive[i].trimmed_mean_s)
+
+    assert winner == fixed_winner
+    assert not adaptive[fixed_winner].raced_out
+    for i, res in enumerate(adaptive):
+        assert res.r <= r_cap                      # eq. 3 cap respected
+        if res.raced_out:                          # raced ⇒ fixed-R loser
+            assert fixed[i] > fixed[fixed_winner]
+
+
+@given(st.floats(min_value=1e-3, max_value=10.0),
+       st.floats(min_value=0.0, max_value=0.05),
+       st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=60, deadline=None)
+def test_adaptive_mean_is_ci_close_to_fixed_r_mean(mean, noise, seed):
+    """Early stopping may not bias the estimate: the adaptively-stopped
+    trimmed mean lies within its own reported CI (plus the noise span)
+    of the full fixed-R trimmed mean over the same stream."""
+    r_cap, k = 30, 3
+    samples = _noise_samples(mean, noise, seed, r_cap)
+    res = measure_callable(iter(samples).__next__, r=r_cap, k=k)
+    full = trimmed_mean(samples, k)
+    tol = res.ci_half_width_s + noise * mean + 1e-12
+    assert abs(res.trimmed_mean_s - full) <= tol

@@ -262,3 +262,78 @@ def test_inherited_hints_reach_coalesced_llm_prompts(tmp_path):
     # 999 is outside every variant space: it can only come from the hint
     assert any("999" in p for p in prompts), \
         "inherited hint never appeared in a coalesced round prompt"
+
+
+# ------------------------------------------------- timing lease ----------
+def test_timing_lease_two_process_contention(tmp_path):
+    """Two separate processes hammering the same lease file must never
+    overlap inside a wall-clock slice: the enter/exit token stream on a
+    shared O_APPEND log has to be strictly paired.  This is the
+    invariant that lets measured platforms fan out across worker
+    processes (the old one-exclusive-slot pinning is gone)."""
+    import os
+    import subprocess
+    import sys
+
+    helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "_lease_proc.py")
+    lease = str(tmp_path / "lease.lock")
+    log = str(tmp_path / "tokens.log")
+    procs = [subprocess.Popen([sys.executable, helper, lease, log,
+                               f"p{i}", "40"]) for i in range(2)]
+    for p in procs:
+        assert p.wait(timeout=120) == 0
+    with open(log) as f:
+        tokens = [line.split() for line in f if line.strip()]
+    assert len(tokens) == 2 * 2 * 40
+    holder = None
+    for kind, tag in tokens:
+        if kind == "enter":
+            assert holder is None, \
+                f"{tag} entered while {holder} held the lease"
+            holder = tag
+        else:
+            assert holder == tag
+            holder = None
+    assert holder is None
+    # both processes really took turns (interleaved, not serial runs)
+    order = [tag for kind, tag in tokens if kind == "enter"]
+    assert len(set(order)) == 2
+
+
+@pytest.mark.slow
+def test_measured_fanout_then_serial_replay_agree(tmp_path):
+    """Measured-platform conformance under fan-out: a CPU campaign over
+    a 2-worker subprocess fabric (timing lease, no pinning) produces a
+    shared cache that a serial in-process re-run replays verbatim —
+    same winners, zero re-measurements.  (Winner *variants* across two
+    cold measured runs are wall-clock physics, not a contract; the
+    contract is that the fabric's records are complete and faithful
+    enough to stand in for the serial path entirely.)"""
+    from repro.core import CPUPlatform, SubprocessExecutor
+    from repro.core.measure import MeasureConfig
+
+    cfg = OptConfig(d_rounds=1, n_candidates=2, r=5, k=1)
+    cache_path = str(tmp_path / "ec.jsonl")
+
+    def run(executor):
+        camp = Campaign(CPUPlatform(), executor=executor,
+                        cache=EvalCache(cache_path),
+                        measure=MeasureConfig(ci_rel=0.25))
+        jobs = [CaseJob(get_case(n), HeuristicProposer(0), cfg=cfg,
+                        constraints=FAST, seed=0)
+                for n in ("atax", "bicg")]
+        try:
+            return camp.run(jobs)
+        finally:
+            executor.close()
+
+    fanned = run(SubprocessExecutor(2))
+    replay = run(InProcessExecutor(1))
+    for a, b in zip(fanned, replay):
+        assert b.best_variant == a.best_variant, \
+            f"{a.case_name}: serial replay changed the winner"
+        assert b.best_time_s == pytest.approx(a.best_time_s, rel=1e-12)
+        assert b.cache_misses == 0, \
+            f"{b.case_name}: replay re-measured {b.cache_misses} evals"
+        assert b.cache_hits > 0

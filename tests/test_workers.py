@@ -295,25 +295,35 @@ def test_results_db_multiprocess_writers_no_torn_lines(tmp_path):
             == list(range(n))
 
 
-def test_subprocess_clamps_measured_platform_by_default():
-    """A policy-sized subprocess fabric must not fan a measured
-    (wall-clock) platform out — concurrent timing corrupts eq. 3; an
-    explicit width is the caller's deliberate override (mirrors
-    Campaign(max_workers=...))."""
-    ex = SubprocessExecutor()
-    assert ex._slots_for(_ctx(CPUPlatform()), 8) == [0]
-    assert len(ex._slots_for(_ctx(TPUModelPlatform()), 8)) >= 1
-    explicit = SubprocessExecutor(3)
-    assert explicit._slots_for(_ctx(CPUPlatform()), 8) == [0, 1, 2]
+def test_measured_platform_fans_out_with_lease():
+    """Measured platforms are no longer pinned to one exclusive slot:
+    the cross-process timing lease serializes wall-clock slices, so the
+    routing fans them out exactly like analytic platforms — and every
+    measured spec must carry a lease path for the workers to share."""
+    ex = SubprocessExecutor(3)
+    assert ex._slots_for(_ctx(CPUPlatform()), 8) == [0, 1, 2]
+    assert ex._slots_for(_ctx(TPUModelPlatform()), 8) == [0, 1, 2]
+    # a measured spec always carries a lease, even cache-less (the
+    # executor derives a campaign-scoped fallback path)
+    spec = job_to_spec(_job(), _ctx(CPUPlatform()), "c-lease")
+    assert spec["lease"] and "c-lease" in spec["lease"]
+    # cache-backed context → the lease lives next to the cache file
+    import tempfile as _tf
+    with _tf.TemporaryDirectory() as d:
+        cache = EvalCache(os.path.join(d, "ec.jsonl"))
+        spec = job_to_spec(_job(), _ctx(CPUPlatform(), cache=cache), "c1")
+        assert spec["lease"] == cache.path + ".timelease"
+    # analytic platforms need no lease
+    spec = job_to_spec(_job(), _ctx(TPUModelPlatform()), "c2")
+    assert spec["lease"] is None
 
 
 # ------------------------------------------------- local cluster ---------
-def test_local_cluster_pins_measured_fans_out_analytic():
+def test_local_cluster_fans_out_measured_and_analytic():
     ex = LocalClusterExecutor(4)
-    analytic = ex._slots_for(_ctx(TPUModelPlatform()), 8)
-    assert analytic == [0, 1, 2, 3]
-    measured = ex._slots_for(_ctx(CPUPlatform()), 8)
-    assert measured == ["pin:cpu"]          # one exclusive worker
+    assert ex._slots_for(_ctx(TPUModelPlatform()), 8) == [0, 1, 2, 3]
+    # pinning deleted: measured platforms use the same general slots
+    assert ex._slots_for(_ctx(CPUPlatform()), 8) == [0, 1, 2, 3]
     ex.close()
 
 
