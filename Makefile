@@ -1,5 +1,5 @@
 .PHONY: verify test-fast test-workers test-conformance test-measure \
-	bench bench-full
+	test-serve bench bench-full bench-serve
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -31,6 +31,18 @@ test-measure:
 		python -m pytest -q tests/test_measure.py \
 			tests/test_executor_conformance.py::test_timing_lease_two_process_contention \
 			tests/test_executor_conformance.py::test_measured_fanout_then_serial_replay_agree
+
+# Serving engine: continuous-batching equivalence properties, server
+# mechanics, and the online autotune loop (the CI test-serve job)
+test-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_serve_decode.py \
+			tests/test_serve_continuous.py tests/test_serve_autotune.py
+
+# Old-vs-new serving benchmark (table 9) on the reduced LM
+bench-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m benchmarks.table9_serving
 
 # Campaign-engine benchmark tables (CI-scale parameters)
 bench:

@@ -48,6 +48,8 @@ class BenchContext:
     max_workers: Optional[int] = None
     executor: Optional[str] = None   # inprocess | subprocess | local-cluster
     measure: Optional[MeasureConfig] = None   # adaptive-engine policy
+    serve_slots: Optional[int] = None         # table 9: KV slot pool size
+    serve_buckets: Optional[List[int]] = None  # table 9: prefill buckets
 
     def campaign(self, platform) -> Campaign:
         # --workers applies to measured platforms too: their wall-clock

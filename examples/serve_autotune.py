@@ -1,12 +1,15 @@
 """Online serving autotune demo: live traffic + background campaigns.
 
 A reduced-config model serves continuous-batching traffic while a
-``ServeAutotuner`` thread watches the per-site telemetry, re-optimizes
-the hot kernels at the traffic-weighted scales, and hot-swaps winners
-into the ops registry through guarded installs (FE-checked at the
-observed scale, auto-rollback on regression).  The server picks each
-swap up at a step boundary — watch the ``swap epochs`` counter — without
-interrupting in-flight requests.
+``ServeAutotuner`` thread watches the per-site telemetry.  The server
+tags every prefill/decode event with the request's prefill bucket, so
+the autotuner sees each ``(site, bucket)`` pair as its own hotspot —
+campaign keys look like ``attention@b16`` — and re-optimizes each
+bucket's traffic at that bucket's observed scale.  Winners hot-swap into
+the ops registry through guarded installs (FE-checked at the observed
+scale, auto-rollback on regression); the server picks each swap up at a
+step boundary — watch the ``swap epochs`` counter — without interrupting
+in-flight requests.
 
     PYTHONPATH=src python examples/serve_autotune.py [--arch glm4-9b]
                                                      [--requests 8]
@@ -31,7 +34,6 @@ def main():
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
     args = ap.parse_args()
 
     from repro.core import (EvalCache, MEPConstraints, OptConfig,
@@ -46,6 +48,8 @@ def main():
     ops.clear_all()
     ops.telemetry.reset()
     srv = BatchedServer(model, params, slots=3, max_len=64)
+    print(f"server: buckets {srv.buckets}, {srv.aot_compiles} AOT "
+          f"executables")
 
     tuner = ServeAutotuner(
         TPUModelPlatform(),
@@ -61,31 +65,35 @@ def main():
     rng = np.random.default_rng(0)
 
     def serve_wave(n):
-        reqs = [srv.submit(rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
+        # ragged traffic across two prefill buckets: short chat prompts
+        # and a longer-context tail
+        reqs = [srv.submit(rng.integers(
+                    0, cfg.vocab_size,
+                    int(rng.integers(6, 14)) if i % 2 else
+                    int(rng.integers(20, 30))).astype(np.int32),
                            max_new=args.max_new)
-                for _ in range(n)]
+                for i in range(n)]
         t0 = time.time()
-        steps = 0
-        while (any(not r.done for r in reqs) or srv.queue) and steps < 500:
-            srv.step()
-            steps += 1
+        srv.run(max_steps=2000)
         dt = time.time() - t0
         toks = sum(len(r.tokens) for r in reqs)
         print(f"wave: {sum(r.done for r in reqs)}/{n} requests, {toks} "
-              f"tokens in {steps} steps, {dt:.2f}s ({toks / dt:.1f} tok/s), "
+              f"tokens, {dt:.2f}s ({toks / dt:.1f} tok/s), "
               f"{srv.swap_epochs} swap epochs so far", flush=True)
 
-    # wave 1 builds up telemetry; then give the background loop room to
-    # finish a campaign + guarded install; wave 2 serves through the swap
+    # wave 1 builds up per-bucket telemetry; then give the background
+    # loop room to finish a campaign + guarded install; wave 2 serves
+    # through the swap
     serve_wave(args.requests)
+    print(f"bucket traffic: "
+          f"{ops.telemetry.site_buckets('attention')} tokens/bucket")
     deadline = time.time() + 120
     while time.time() < deadline and not any(r.installed or r.rolled_back
                                              for r in tuner.reports):
         time.sleep(0.2)
     serve_wave(args.requests)
     tuner.stop()
-    print(f"telemetry: {ops.telemetry.snapshot()}")
+    print(f"tuned (site@bucket -> scale): {tuner.tuned_scales}")
     for rep in tuner.reports:
         for swap in rep.swaps:
             print(f"cycle {rep.cycle}: {swap.site} -> {swap.variant} "

@@ -167,6 +167,14 @@ class Telemetry:
     event per generated token, scale = context length).  The autotuner
     reads ``hot_sites`` / ``weighted_scale`` to decide *what* to optimize
     and *at which scale* — the observed workload, not a benchmark grid.
+
+    Keys optionally carry a **bucket** dimension: the continuous-batching
+    server tags every event with the prefill length-bucket its request was
+    admitted under, so each (site, bucket) pair becomes a distinct
+    telemetry site and the autotuner campaigns per traffic bucket at that
+    bucket's observed scale (``weighted_scale(site, bucket=...)``).
+    Bucket-less observations keep the old aggregate behavior; bucketed
+    ones contribute to both the aggregate and their bucket's sub-stats.
     """
 
     def __init__(self):
@@ -174,15 +182,22 @@ class Telemetry:
         self._sites: Dict[str, Dict[str, Any]] = {}
 
     def observe(self, site: str, *, scale: int, tokens: int = 1,
-                kind: str = "decode") -> None:
+                kind: str = "decode", bucket: Optional[int] = None) -> None:
         with self._lock:
             st = self._sites.setdefault(
-                site, {"calls": 0, "tokens": 0, "kinds": {}, "scales": {}})
+                site, {"calls": 0, "tokens": 0, "kinds": {}, "scales": {},
+                       "buckets": {}})
             st["calls"] += 1
             st["tokens"] += tokens
             st["kinds"][kind] = st["kinds"].get(kind, 0) + tokens
             st["scales"][int(scale)] = (st["scales"].get(int(scale), 0)
                                         + tokens)
+            if bucket is not None:
+                bk = st["buckets"].setdefault(
+                    int(bucket), {"tokens": 0, "scales": {}})
+                bk["tokens"] += tokens
+                bk["scales"][int(scale)] = (bk["scales"].get(int(scale), 0)
+                                            + tokens)
 
     def tokens(self, site: str, kind: Optional[str] = None) -> int:
         with self._lock:
@@ -191,15 +206,32 @@ class Telemetry:
                 return 0
             return st["tokens"] if kind is None else st["kinds"].get(kind, 0)
 
-    def weighted_scale(self, site: str) -> Optional[int]:
-        """Traffic-weighted mean scale observed at ``site`` (None if no
-        traffic) — every token votes with the context size it ran at."""
+    def site_buckets(self, site: str) -> Dict[int, int]:
+        """bucket -> observed tokens for ``site`` (empty if the traffic
+        never carried a bucket tag), hottest bucket first."""
         with self._lock:
             st = self._sites.get(site)
-            if not st or not st["scales"]:
+            if not st:
+                return {}
+            return dict(sorted(((b, bk["tokens"])
+                                for b, bk in st["buckets"].items()),
+                               key=lambda kv: -kv[1]))
+
+    def weighted_scale(self, site: str,
+                       bucket: Optional[int] = None) -> Optional[int]:
+        """Traffic-weighted mean scale observed at ``site`` (None if no
+        traffic) — every token votes with the context size it ran at.
+        With ``bucket``, restrict to that prefill bucket's traffic."""
+        with self._lock:
+            st = self._sites.get(site)
+            if not st:
                 return None
-            total = sum(st["scales"].values())
-            return int(round(sum(s * w for s, w in st["scales"].items())
+            scales = (st["scales"] if bucket is None else
+                      st["buckets"].get(int(bucket), {}).get("scales", {}))
+            if not scales:
+                return None
+            total = sum(scales.values())
+            return int(round(sum(s * w for s, w in scales.items())
                              / max(total, 1)))
 
     def hot_sites(self, min_tokens: int = 1) -> List[str]:
@@ -214,7 +246,10 @@ class Telemetry:
         with self._lock:
             return {site: {"calls": st["calls"], "tokens": st["tokens"],
                            "kinds": dict(st["kinds"]),
-                           "scales": dict(st["scales"])}
+                           "scales": dict(st["scales"]),
+                           "buckets": {b: {"tokens": bk["tokens"],
+                                           "scales": dict(bk["scales"])}
+                                       for b, bk in st["buckets"].items()}}
                     for site, st in self._sites.items()}
 
     def reset(self) -> None:

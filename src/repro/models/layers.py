@@ -235,6 +235,31 @@ def attention_context_parallel(q, k, v, *, ctx: ShardCtx, q_chunk: int = 256,
                          out_specs=spec, check_vma=False)(q, k, v)
 
 
+# ---- decode cache indexing (shared-position and ragged per-slot) --------
+def cache_update(cache, new, pos):
+    """Write ``new`` [B, 1, ...] into ``cache`` [B, T, ...] at ``pos``.
+
+    ``pos`` is either a scalar (all rows share one decode position — the
+    fixed-batch path) or a [B] vector of per-slot positions (ragged
+    continuous-batching decode, where every slot advances independently).
+    """
+    new = new.astype(cache.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        idx = (jnp.zeros((), jnp.int32), pos) + (jnp.zeros((), jnp.int32),
+                                                 ) * (cache.ndim - 2)
+        return lax.dynamic_update_slice(cache, new, idx)
+    return cache.at[jnp.arange(cache.shape[0]), pos].set(new[:, 0])
+
+
+def decode_lengths(pos, batch: int):
+    """Valid KV length per row after writing at ``pos`` (scalar or [B])."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((batch,), pos + 1, jnp.int32)
+    return pos + 1
+
+
 # ---- int8 KV-cache quantization (per-position, per-kv-head scales) ------
 def kv_quantize(x):
     """x [..., hd] → (int8 values, bf16 scales [..., 1])."""

@@ -115,25 +115,24 @@ class LM:
                                           softcap=cfg.logit_softcap)
             new_kv = (k, v)
         else:
+            # ``pos`` is a scalar (fixed-batch decode) or a [B] vector of
+            # per-slot positions (ragged continuous-batching decode);
+            # cache_update / decode_lengths handle both layouts
             if self.kv_quant:
                 k_cache, v_cache, ks_cache, vs_cache = cache
                 kq, ks = L.kv_quantize(k)
                 vq, vs = L.kv_quantize(v)
-                k_cache = lax.dynamic_update_slice(k_cache, kq, (0, pos, 0, 0))
-                v_cache = lax.dynamic_update_slice(v_cache, vq, (0, pos, 0, 0))
-                ks_cache = lax.dynamic_update_slice(ks_cache, ks,
-                                                    (0, pos, 0, 0))
-                vs_cache = lax.dynamic_update_slice(vs_cache, vs,
-                                                    (0, pos, 0, 0))
+                k_cache = L.cache_update(k_cache, kq, pos)
+                v_cache = L.cache_update(v_cache, vq, pos)
+                ks_cache = L.cache_update(ks_cache, ks, pos)
+                vs_cache = L.cache_update(vs_cache, vs, pos)
                 scales = {"k_scale": ks_cache, "v_scale": vs_cache}
             else:
                 k_cache, v_cache = cache
-                k_cache = lax.dynamic_update_slice(
-                    k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
-                v_cache = lax.dynamic_update_slice(
-                    v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+                k_cache = L.cache_update(k_cache, k, pos)
+                v_cache = L.cache_update(v_cache, v, pos)
                 scales = {"k_scale": None, "v_scale": None}
-            length = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+            length = L.decode_lengths(pos, x.shape[0])
             if ctx.enabled and ctx.decode_kv == "dp_seq":
                 out = L.flash_decode_sharded(q, k_cache, v_cache, ctx, length,
                                              seq_axes=ctx.dp, batch_axes=(),
@@ -350,15 +349,30 @@ class LM:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_shapes(batch, max_len))
 
-    def prefill(self, params, tokens, max_len: Optional[int] = None):
-        """Returns (last_token_logits, cache ready at pos=S)."""
+    def prefill(self, params, tokens, max_len: Optional[int] = None,
+                lengths: Optional[jax.Array] = None):
+        """Returns (last_token_logits, cache ready at pos=S).
+
+        ``lengths`` [B] (optional) marks each row's true prompt length in a
+        right-padded packed batch: the returned logits are taken at column
+        ``lengths-1`` per row instead of the last column.  Under causal
+        attention the pad tail never influences earlier positions, so a
+        packed bucketed prefill is exactly equivalent to per-request
+        prefills (pad K/V beyond ``lengths`` is masked out at decode by the
+        per-slot length).
+        """
         cfg = self.cfg
         B, Sq = tokens.shape
         max_len = max_len or Sq
         hidden, cache, _ = self.forward(params, tokens, collect_cache=True)
+        if lengths is None:
+            h_last = hidden[:, -1:, :]
+        else:
+            idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, Sq - 1)
+            h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
         # under cp the head rests sharded over all axes: a full gather would
         # materialize V×d (4.2 GB for command-r); psum of [B,1,V] is cheaper
-        logits = self.logits_fn(params, hidden[:, -1:, :],
+        logits = self.logits_fn(params, h_last,
                                 gather=self.ctx.attn_impl != "cp")
         full = self.init_cache(B, max_len)
         if cfg.family != "ssm":
@@ -380,10 +394,16 @@ class LM:
         return logits, full
 
     def decode_step(self, params, cache, token, pos):
-        """token [B,1] int32; pos scalar int32 (current cache length).
+        """token [B,1] int32; pos scalar int32 (current cache length) or a
+        [B] int32 vector of per-slot cache lengths (ragged decode: each
+        continuous-batching slot advances independently).
         Returns (logits [B,1,V], new_cache)."""
         x = self._embed(params, token)
-        positions = jnp.full((1, 1), pos, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            positions = jnp.full((1, 1), pos, jnp.int32)
+        else:
+            positions = pos[:, None]                     # [B, 1] per-slot
 
         def body(x, xs):
             lp, cache_l = xs

@@ -1,3 +1,5 @@
-from repro.serve.decode import BatchedServer, Request, generate
+from repro.serve.decode import (BatchedServer, FixedBatchServer, Request,
+                                generate)
 from repro.serve.autotune import (AutotuneConfig, AutotuneReport,
-                                  ServeAutotuner, snap_scale)
+                                  ServeAutotuner, bucket_key, snap_scale,
+                                  split_bucket_key)

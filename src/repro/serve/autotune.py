@@ -37,7 +37,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -92,6 +92,21 @@ def snap_scale(case: KernelCase, observed: int) -> int:
     """Nearest scale the case supports to the observed traffic scale
     (ties resolve to the smaller — cheaper — scale)."""
     return min(case.scales, key=lambda s: (abs(s - int(observed)), s))
+
+
+def bucket_key(site: str, bucket: Optional[int] = None) -> str:
+    """Composite telemetry-site key: per-bucket traffic shows up as
+    ``site@b<bucket>`` so each (site, bucket) pair is a distinct campaign
+    site; bucket-less traffic keeps the bare site name."""
+    return site if bucket is None else f"{site}@b{int(bucket)}"
+
+
+def split_bucket_key(key: str) -> Tuple[str, Optional[int]]:
+    """Inverse of ``bucket_key``: -> (site, bucket-or-None)."""
+    site, sep, b = key.rpartition("@b")
+    if sep and b.isdigit():
+        return site, int(b)
+    return key, None
 
 
 @dataclass
@@ -189,9 +204,14 @@ class ServeAutotuner:
         return {c.app_site: c for c in cases() if c.app_site}
 
     def hot_sites(self) -> Dict[str, int]:
-        """Sites above the traffic threshold that map to a known case,
-        hottest first, with the observed scale snapped to the case's
-        supported grid.  Sites already tuned at that snap are dropped."""
+        """Campaign sites above the traffic threshold that map to a known
+        case, hottest first, with the observed scale snapped to the case's
+        supported grid.  Bucketed traffic (the continuous-batching server
+        tags every event with its prefill bucket) yields one entry per hot
+        bucket — keyed ``site@b<bucket>`` — each snapped to *that bucket's*
+        traffic-weighted scale, so campaigns tune every traffic bucket at
+        the scale it actually serves.  Entries already tuned at their snap
+        are dropped."""
         known = self.site_cases()
         cfg = self.config
         out: Dict[str, int] = {}
@@ -199,13 +219,19 @@ class ServeAutotuner:
             case = known.get(site)
             if case is None:
                 continue
-            observed = self.telemetry.weighted_scale(site)
-            scale = snap_scale(case, observed)
-            if self.tuned_scales.get(site) == scale:
-                continue
-            out[site] = scale
-            if len(out) >= cfg.max_sites:
-                break
+            buckets = [b for b, t in self.telemetry.site_buckets(site).items()
+                       if t >= cfg.min_tokens]
+            for b in buckets or [None]:       # no bucket tags → aggregate
+                observed = self.telemetry.weighted_scale(site, bucket=b)
+                if observed is None:
+                    continue
+                scale = snap_scale(case, observed)
+                key = bucket_key(site, b)
+                if self.tuned_scales.get(key) == scale:
+                    continue
+                out[key] = scale
+                if len(out) >= cfg.max_sites:
+                    return out
         return out
 
     # ----------------------------------------------------------- probing --
@@ -259,32 +285,41 @@ class ServeAutotuner:
         cfg = self.config
         cases_map = self.site_cases()
         jobs = []
-        for site, scale in rep.hot.items():
+        for key, scale in rep.hot.items():
+            site, _bucket = split_bucket_key(key)
             case = cases_map[site]
             mep = build_mep(case, self.platform, constraints=cfg.constraints,
                             seed=cfg.seed, scale=scale)
             jobs.append(CaseJob(
                 case, self.proposer_factory(site, cfg.seed + rep.cycle),
                 cfg=cfg.opt, constraints=cfg.constraints, seed=cfg.seed,
-                mep=mep, label=f"autotune:{site}@{scale}"))
+                mep=mep, label=f"autotune:{key}@{scale}"))
         camp = Campaign(self.platform, patterns=self.patterns,
                         cache=self.cache, db=self.db, verbose=self.verbose,
                         executor=self._executor, max_workers=cfg.workers,
                         measure=cfg.measure)
         rep.results = camp.run(jobs, stop=self._stop)
-        for (site, scale), res in zip(rep.hot.items(), rep.results):
+        for (key, scale), res in zip(rep.hot.items(), rep.results):
             # an interrupted job stays un-tuned so the next cycle resumes
             # it (completed rounds replay from the shared cache)
             if res.stop_reason != "stop requested":
-                self.tuned_scales[site] = scale
+                self.tuned_scales[key] = scale
         if not cfg.install or self._stop.is_set():
             return
-        for (site, scale), res in zip(rep.hot.items(), rep.results):
+        # installs land per *site* (the registry has no bucket dimension):
+        # buckets are walked hottest-first, so when several buckets of one
+        # site produced different winners the hottest bucket's wins
+        handled_sites = set()
+        for (key, scale), res in zip(rep.hot.items(), rep.results):
+            site, _bucket = split_bucket_key(key)
             case = cases_map[site]
+            if site in handled_sites:
+                continue
             if res.speedup <= 1.0 + cfg.improve_eps:
                 continue
             if res.best_variant == res.baseline_variant:
                 continue
+            handled_sites.add(site)
             active = ops.active_entry(site)
             if active is not None and \
                     active.info.get("variant") == res.best_variant:

@@ -1,29 +1,44 @@
-"""Batched serving: prefill + greedy decode with continuous batching lite.
+"""Continuous-batching serving engine: ragged decode, bucketed packed
+prefill, per-bucket AOT executables.
 
-``BatchedServer`` keeps a fixed-size decode batch; finished sequences are
-replaced from the pending queue by re-prefilling into their cache rows
-(slot recycling).  This is the serving loop the decode_* dry-run cells
-lower one step of.
+``BatchedServer`` keeps a fixed pool of KV-cache *slots* and streams
+greedy decode continuously:
 
-The server participates in the online autotune loop (serve.autotune):
+* **Ragged decode** — a per-slot position vector is threaded through
+  ``model.decode_step``, so every slot advances independently: admitting
+  a short prompt next to a long one, or a sequence finishing mid-batch,
+  never stalls or length-aligns the rest of the batch.
+* **Bucketed packed prefill** — admitted prompts are grouped into
+  power-of-two length buckets, right-padded to their bucket, and
+  prefilled as one packed batch per bucket (one device call per bucket
+  per admission wave, not one per request).  Under causal attention the
+  pad tail cannot influence earlier positions and pad K/V beyond the true
+  length is masked out at decode, so packed prefill is exactly equivalent
+  to per-request prefill.  Recurrent-state families (ssm / hybrid carry
+  cumulative scan state, which padding would corrupt) fall back to
+  exact-length buckets: still packed, never padded.  Their chunked-scan
+  prompt-length constraints (``cfg.ssm.chunk`` divisibility for long
+  prompts) are the model's own, shared with ``generate()``.
+* **Per-bucket AOT executables** — every (bucket, packed-rows) prefill
+  shape plus the decode step is ``jax.jit(...).lower(...).compile()``d at
+  startup, so steady-state traffic never hits a mid-request trace.  The
+  swap-epoch contract is preserved: a registry mutation
+  (``ops.registry_epoch``) invalidates all executables at the next step
+  boundary and they are rebuilt against the newly active impls.
+* **Per-bucket telemetry** — every prefill/decode event is tagged with
+  the request's bucket, so each (site, bucket) pair is a distinct
+  telemetry site and ``serve.autotune`` campaigns per traffic bucket at
+  that bucket's observed scale.
 
-* **Telemetry** — every admitted prompt and decoded token is reported to
-  the per-site telemetry in ``repro.kernels.ops`` (prefill events carry
-  the prompt length as their scale; decode events the context length),
-  so a background campaign optimizes at the traffic-weighted scales the
-  server actually runs.
-* **Swap epochs** — the jit-compiled prefill/decode step functions bake
-  the active registry impl in at trace time, so the server watches
-  ``ops.registry_epoch()`` and re-traces at the next step boundary after
-  any registry mutation (a hot-swap).  In-flight requests and their KV
-  cache rows are untouched: the swap only changes how *future* traffic
-  is computed.
+``FixedBatchServer`` preserves the pre-continuous baseline (single shared
+decode position, one prefill call per request, prompts padded to one
+``prompt_len``) for the table-9 old-vs-new serving benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +50,12 @@ from repro.kernels import ops
 def generate(model, params, prompts: jnp.ndarray, *, max_new: int = 16,
              frames: Optional[jnp.ndarray] = None,
              eos_id: Optional[int] = None) -> np.ndarray:
-    """Greedy generation for a fixed batch.  prompts: [B, S] int32."""
+    """Greedy generation for a fixed batch.  prompts: [B, S] int32.
+
+    With ``eos_id``, a sequence stops at its first EOS: every later
+    column is masked to ``eos_id`` (pad-with-eos), and the loop exits
+    early once all rows have finished.
+    """
     B, S = prompts.shape
     max_len = S + max_new
     if model.cfg.family == "encdec":
@@ -46,13 +66,25 @@ def generate(model, params, prompts: jnp.ndarray, *, max_new: int = 16,
     step = jax.jit(model.decode_step)
     tok = jnp.argmax(logits[:, -1, :model.cfg.vocab_size],
                      axis=-1).astype(jnp.int32)[:, None]
+    done = (tok[:, 0] == eos_id) if eos_id is not None \
+        else jnp.zeros((B,), bool)
     out = [tok]
     for i in range(max_new - 1):
+        if eos_id is not None and bool(done.all()):
+            break
         logits, cache = step(params, cache, tok, jnp.int32(S + i))
-        tok = jnp.argmax(logits[:, -1, :model.cfg.vocab_size],
+        nxt = jnp.argmax(logits[:, -1, :model.cfg.vocab_size],
                          axis=-1).astype(jnp.int32)[:, None]
+        if eos_id is not None:
+            nxt = jnp.where(done[:, None], jnp.int32(eos_id), nxt)
+            done = done | (nxt[:, 0] == eos_id)
+        tok = nxt
         out.append(tok)
-    return np.asarray(jnp.concatenate(out, axis=1))
+    res = np.asarray(jnp.concatenate(out, axis=1))
+    if res.shape[1] < max_new:        # early EOS exit: pad-with-eos
+        pad = np.full((B, max_new - res.shape[1]), eos_id, res.dtype)
+        res = np.concatenate([res, pad], axis=1)
+    return res
 
 
 @dataclasses.dataclass
@@ -62,10 +94,286 @@ class Request:
     max_new: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    bucket: int = 0               # prefill length bucket admitted under
+
+
+def _pow2_buckets(max_len: int, lo: int = 8) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to ``max_len``."""
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
 
 
 class BatchedServer:
-    """Continuous-batching-lite greedy server over a fixed slot count."""
+    """Continuous-batching greedy server over a fixed slot count."""
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 128,
+                 eos_id: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 aot: bool = True,
+                 telemetry_site: str = "attention",
+                 telemetry: Optional[ops.Telemetry] = None):
+        assert model.cfg.family != "encdec", "use generate() for enc-dec"
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        # padding a packed batch is only exact when positions beyond a
+        # row's true length cannot leak into it: causal attention masks
+        # them, but cumulative recurrent state (ssm / hybrid) would absorb
+        # the pads — those families pack exact-length groups instead
+        self.padded_packing = model.cfg.family not in ("ssm", "hybrid")
+        if self.padded_packing:
+            self.buckets: Tuple[int, ...] = tuple(sorted(
+                buckets)) if buckets else _pow2_buckets(max_len)
+        else:
+            self.buckets = ()     # exact-length buckets, discovered live
+        self.aot = aot
+        self.site = telemetry_site
+        self.telemetry = telemetry if telemetry is not None else ops.telemetry
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.finished: List[Request] = []
+        self.pos = np.zeros(slots, np.int32)      # per-slot cache length
+        self.cache = model.init_cache(slots, max_len)
+        self.swap_epochs = 0                      # hot-swap re-traces so far
+        self.aot_compiles = 0                     # executables built so far
+        self._rid = itertools.count()
+        self._epoch = ops.registry_epoch()
+        self._exec: Dict[Tuple, object] = {}      # (kind, ...) -> executable
+        self._trace_steps()
+
+    # ------------------------------------------------------- executables --
+    def _trace_steps(self) -> None:
+        """(Re)build the executable set against the current registry state.
+        Fresh lowerings re-consult the registry, so a newly-installed impl
+        takes effect here and only here."""
+        self._exec.clear()
+        self._get_decode()
+        if self.aot and self.padded_packing:
+            n = 1
+            while n <= _next_pow2(self.slots):
+                for bucket in self.buckets:
+                    self._get_prefill(bucket, n)
+                n *= 2
+
+    def _cache_avals(self):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache)
+
+    def _aot(self, jitted, *avals):
+        """AOT-compile ``jitted`` for ``avals`` (falls back to the plain
+        jit object — which compiles on first call — if lowering fails).
+        With ``aot=False`` the jit object is returned as-is and compiles
+        lazily on first call."""
+        if not self.aot:
+            return jitted
+        try:
+            ex = jitted.lower(self.params, *avals).compile()
+        except Exception:               # noqa: BLE001 — serving must start
+            ex = jitted
+        self.aot_compiles += 1
+        return ex
+
+    def _get_decode(self):
+        key = ("decode",)
+        ex = self._exec.get(key)
+        if ex is None:
+            model, vocab = self.model, self.model.cfg.vocab_size
+
+            def decode_and_pick(params, cache, toks, pos):
+                # greedy argmax fused into the executable: one device
+                # call per step, no eager logit slicing on the host
+                logits, cache = model.decode_step(params, cache, toks, pos)
+                return (jnp.argmax(logits[:, -1, :vocab],
+                                   axis=-1).astype(jnp.int32), cache)
+
+            ex = self._aot(
+                jax.jit(decode_and_pick), self._cache_avals(),
+                jax.ShapeDtypeStruct((self.slots, 1), jnp.int32),
+                jax.ShapeDtypeStruct((self.slots,), jnp.int32))
+            self._exec[key] = ex
+        return ex
+
+    def _get_prefill(self, bucket: int, n: int):
+        key = ("prefill", bucket, n)
+        ex = self._exec.get(key)
+        if ex is None:
+            model, max_len = self.model, self.max_len
+            vocab = model.cfg.vocab_size
+
+            def packed_prefill(params, toks, lens, cache, si):
+                # prefill + greedy pick + slot splice fused into one
+                # executable: row r lands in cache slot si[r]; pad rows
+                # carry an out-of-range index and are dropped
+                logits, cache1 = model.prefill(params, toks,
+                                               max_len=max_len,
+                                               lengths=lens)
+                first = jnp.argmax(logits[:, -1, :vocab],
+                                   axis=-1).astype(jnp.int32)
+
+                def put(big, one):
+                    return big.at[:, si].set(one.astype(big.dtype),
+                                             mode="drop")
+                return first, jax.tree.map(put, cache, cache1)
+
+            ex = self._aot(
+                jax.jit(packed_prefill),
+                jax.ShapeDtypeStruct((n, bucket), jnp.int32),
+                jax.ShapeDtypeStruct((n,), jnp.int32),
+                self._cache_avals(),
+                jax.ShapeDtypeStruct((n,), jnp.int32))
+            self._exec[key] = ex
+        return ex
+
+    def _refresh_impls(self) -> None:
+        """Swap epoch: if the ops registry changed since the last trace,
+        rebuild every executable at this step boundary.  In-flight
+        requests keep their cache rows and continue undisturbed."""
+        epoch = ops.registry_epoch()
+        if epoch != self._epoch:
+            self._epoch = epoch
+            self.swap_epochs += 1
+            self._trace_steps()
+
+    # --------------------------------------------------------- admission --
+    def bucket_of(self, prompt_len: int) -> int:
+        """The prefill bucket a prompt of this length is admitted under."""
+        if not self.padded_packing:
+            return prompt_len                    # exact-length packing
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds the largest "
+                         f"bucket {self.buckets[-1]} (max_len={self.max_len})")
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        req = Request(rid=next(self._rid), prompt=prompt, max_new=max_new,
+                      bucket=self.bucket_of(len(prompt)))
+        self.queue.append(req)
+        return req
+
+    def _finish(self, req: Request, slot: Optional[int]) -> None:
+        req.done = True
+        self.finished.append(req)
+        if slot is not None:
+            self.active[slot] = None          # slot recycled at next admit
+            self.pos[slot] = 0
+
+    def _admit(self) -> int:
+        """Drain the queue into free slots, one packed prefill call per
+        bucket per wave.  Returns the number of requests admitted."""
+        admitted = 0
+        while self.queue:
+            free = [s for s in range(self.slots) if self.active[s] is None]
+            if not free:
+                break
+            wave, rest = self.queue[:len(free)], self.queue[len(free):]
+            self.queue = rest
+            admitted += len(wave)
+            groups: Dict[int, List[Request]] = {}
+            for req in wave:                  # FIFO within each bucket
+                groups.setdefault(req.bucket, []).append(req)
+            fi = 0
+            finished_at_prefill = False
+            for bucket, reqs in groups.items():
+                n_pad = _next_pow2(len(reqs))  # bounded executable count
+                toks = np.zeros((n_pad, bucket), np.int32)
+                lens = np.ones((n_pad,), np.int32)
+                # tentative slot per row; pad rows point past the pool
+                # and are dropped by the in-executable splice.  A row
+                # whose request finishes at its prefill token simply
+                # leaves garbage in a slot that stays free — dead slots
+                # are masked at decode and overwritten on re-admission.
+                si = np.full((n_pad,), self.slots, np.int32)
+                for r, req in enumerate(reqs):
+                    toks[r, :len(req.prompt)] = req.prompt
+                    lens[r] = len(req.prompt)
+                    si[r] = free[fi]
+                    fi += 1
+                first, self.cache = self._get_prefill(bucket, n_pad)(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens),
+                    self.cache, jnp.asarray(si))
+                first = np.asarray(first)
+                for r, req in enumerate(reqs):
+                    tok = int(first[r])
+                    req.tokens.append(tok)
+                    self.telemetry.observe(
+                        self.site, scale=len(req.prompt),
+                        tokens=len(req.prompt), kind="prefill",
+                        bucket=bucket)
+                    if ((self.eos_id is not None and tok == self.eos_id)
+                            or len(req.tokens) >= req.max_new):
+                        self._finish(req, None)  # done at prefill
+                        finished_at_prefill = True
+                        continue
+                    self.active[si[r]] = req
+                    self.pos[si[r]] = len(req.prompt)
+            if not finished_at_prefill:
+                break                         # all tentative slots taken
+            # some requests finished at prefill: their slots are still
+            # free, loop to admit more while the queue has work
+        return admitted
+
+    # ------------------------------------------------------------- steps --
+    def step(self) -> int:
+        """One serving step: admit (packed prefill per bucket), then one
+        ragged decode over every occupied slot.  Returns the amount of
+        work done — requests admitted plus tokens decoded — so ``0``
+        means the server is idle (queue empty, no live slots)."""
+        self._refresh_impls()
+        worked = self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return worked
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.active[s].tokens[-1]
+        # per-slot positions: dead slots decode a dummy token at pos 0
+        # (their row is fully overwritten at the next admission)
+        nxt, self.cache = self._get_decode()(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(nxt)
+        for s in live:
+            req = self.active[s]
+            tok = int(nxt[s])
+            req.tokens.append(tok)
+            self.pos[s] += 1
+            # context length this token was decoded at (traffic weighting)
+            self.telemetry.observe(self.site, scale=int(self.pos[s]),
+                                   tokens=1, kind="decode",
+                                   bucket=req.bucket)
+            if ((self.eos_id is not None and tok == self.eos_id)
+                    or len(req.tokens) >= req.max_new
+                    or int(self.pos[s]) >= self.max_len):
+                self._finish(req, s)          # EOS / budget / cache full
+        return worked + len(live)
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        """Drive steps until the queue *and* the slots are both drained
+        (a step that only admits-and-finishes-at-prefill keeps going
+        while the queue has work)."""
+        for _ in range(max_steps):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            self.step()
+        return self.finished
+
+
+class FixedBatchServer:
+    """Pre-continuous baseline: single shared decode position (all slots
+    must stay length-aligned; prompts are padded to one ``prompt_len``),
+    one prefill call per admitted request, fresh jit trace per shape.
+    Kept verbatim for the table-9 old-vs-new serving benchmark."""
 
     def __init__(self, model, params, *, slots: int = 4, prompt_len: int = 32,
                  max_len: int = 128, eos_id: Optional[int] = None,
@@ -85,22 +393,17 @@ class BatchedServer:
         self.finished: List[Request] = []
         self.pos = np.zeros(slots, np.int32)
         self.cache = model.init_cache(slots, max_len)
-        self.swap_epochs = 0                      # hot-swap re-traces so far
+        self.swap_epochs = 0
         self._rid = itertools.count()
         self._epoch = ops.registry_epoch()
         self._trace_steps()
 
     def _trace_steps(self) -> None:
-        # fresh jit objects re-consult the registry at trace time, so a
-        # newly-installed impl takes effect here and only here
         self._step = jax.jit(self.model.decode_step)
         self._prefill_one = jax.jit(
             lambda p, t: self.model.prefill(p, t, max_len=self.max_len))
 
     def _refresh_impls(self) -> None:
-        """Swap epoch: if the ops registry changed since the last trace,
-        re-trace the step functions at this step boundary.  In-flight
-        requests keep their cache rows and continue undisturbed."""
         epoch = ops.registry_epoch()
         if epoch != self._epoch:
             self._epoch = epoch
@@ -116,7 +419,7 @@ class BatchedServer:
         req.done = True
         self.finished.append(req)
         if slot is not None:
-            self.active[slot] = None          # slot recycled at next admit
+            self.active[slot] = None
 
     def _admit(self):
         for s in range(self.slots):
@@ -124,7 +427,7 @@ class BatchedServer:
                 req = self.queue.pop(0)       # FIFO drain order
                 logits, cache1 = self._prefill_one(
                     self.params, jnp.asarray(req.prompt[None, :]))
-                # splice the single-sequence cache into slot s
+
                 def put(big, one):
                     return big.at[:, s:s + 1].set(one.astype(big.dtype))
                 self.cache = jax.tree.map(put, self.cache, cache1)
@@ -136,14 +439,13 @@ class BatchedServer:
                                        kind="prefill")
                 if ((self.eos_id is not None and tok == self.eos_id)
                         or len(req.tokens) >= req.max_new):
-                    self._finish(req, None)   # done at prefill: keep slot free
+                    self._finish(req, None)
                     continue
                 self.active[s] = req
                 self.pos[s] = len(req.prompt)
 
     def step(self):
-        """One decode step for all occupied slots (single pos: the server
-        keeps slots aligned by padding prompts to prompt_len)."""
+        """One decode step for all occupied slots (single shared pos)."""
         self._refresh_impls()
         self._admit()
         live = [s for s in range(self.slots) if self.active[s] is not None]
@@ -161,7 +463,6 @@ class BatchedServer:
             req = self.active[s]
             tok = int(nxt[s])
             req.tokens.append(tok)
-            # context length this token was decoded at (traffic weighting)
             self.telemetry.observe(
                 self.site, scale=int(self.pos[s]) + len(req.tokens) - 1,
                 tokens=1, kind="decode")
@@ -172,6 +473,7 @@ class BatchedServer:
 
     def run(self, max_steps: int = 1000) -> List[Request]:
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.queue and all(a is None for a in self.active):
                 break
+            self.step()
         return self.finished

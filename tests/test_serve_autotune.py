@@ -87,7 +87,9 @@ def test_autotune_end_to_end_swap_and_rollback(tmp_path):
     # ---- 2. campaign over the observed hotspot at the observed scale ----
     tuner = make_autotuner(db=db)
     rep = tuner.run_once()
-    assert rep.hot == {"attention": 256}         # observed ~8-12 → snapped
+    # the continuous server tags traffic with its prefill bucket, so the
+    # campaign site is per-bucket: observed ~8-12 in bucket 8 → snapped
+    assert rep.hot == {"attention@b8": 256}
     assert len(rep.results) == 1
     res = rep.results[0]
     assert res.speedup > 1.01                    # found a faster variant
@@ -147,7 +149,7 @@ def test_autotune_end_to_end_swap_and_rollback(tmp_path):
     kinds = [r["kind"] for r in db.records()]
     assert "autotune_cycle" in kinds and "autotune_swap" in kinds
     cyc = next(db.records("autotune_cycle"))
-    assert cyc["hot"] == {"attention": 256}
+    assert cyc["hot"] == {"attention@b8": 256}
     assert cyc["swaps"] and cyc["swaps"][0]["active"]
 
     # after the swap the server still serves (registry mutations during
@@ -168,7 +170,7 @@ def test_second_cycle_is_noop_until_traffic_shifts():
     # same traffic profile → site already tuned at that snap → skipped
     rep2 = tuner.run_once()
     assert rep2.hot == {} and rep2.skipped
-    assert tuner.tuned_scales == {"attention": 256}
+    assert tuner.tuned_scales == {"attention@b8": 256}
 
 
 def test_background_thread_start_stop():
@@ -195,4 +197,4 @@ def test_stop_event_interrupts_campaign_mid_flight():
     assert rep.results and rep.results[0].stop_reason == "stop requested"
     assert rep.swaps == []         # no install on a stopped cycle
     # interrupted sites stay un-tuned so the next cycle resumes them
-    assert "attention" not in tuner.tuned_scales
+    assert not tuner.tuned_scales

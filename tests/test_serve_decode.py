@@ -1,10 +1,13 @@
 """BatchedServer mechanics: slot recycling (EOS included), pending-queue
 drain order, telemetry accounting, and registry-driven swap epochs."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import get_case
 from repro.kernels import ops
+from repro.serve import generate
 from serving_stub import StubModel, make_server, prompts
 
 
@@ -103,3 +106,50 @@ def test_request_done_at_prefill_keeps_slot_free():
     srv.run()
     assert a.done and len(a.tokens) == 1
     assert b.done and len(b.tokens) == 2
+
+
+def test_generate_honors_eos_id():
+    """Regression: generate() used to accept eos_id and silently ignore
+    it.  Sequences must stop at their first EOS — every later column is
+    masked to eos_id — and the loop must exit early when all rows are
+    done."""
+    model = StubModel()
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = jnp.asarray(np.stack(prompts(2)))
+    free = generate(model, params, batch, max_new=8)
+    assert free.shape == (2, 8)
+    # pick the token row 0 decodes at position 1 as the EOS: with eos_id
+    # set, everything after it must be eos, not the free-run continuation
+    eos = int(free[0, 1])
+    out = generate(model, params, batch, max_new=8, eos_id=eos)
+    assert out.shape == (2, 8)
+    row = list(out[0])
+    stop = row.index(eos)
+    assert stop <= 1
+    np.testing.assert_array_equal(row[:stop], list(free[0])[:stop])
+    assert all(t == eos for t in row[stop:])
+    # rows that never emit EOS are byte-identical to the free run
+    for b in range(out.shape[0]):
+        if eos not in list(free[b]):
+            np.testing.assert_array_equal(out[b], free[b])
+
+
+def test_run_drains_queue_when_steps_only_admit_and_finish_at_prefill():
+    """run()/step() contract: a step that only admits-and-finishes-at-
+    prefill (max_new=1 → no live slots, ever) must not terminate the
+    loop while the queue still drains."""
+    srv = make_server(slots=1, max_len=32)
+    reqs = [srv.submit(p, max_new=1) for p in prompts(5)]
+    fin = srv.run()
+    assert all(r.done and len(r.tokens) == 1 for r in reqs)
+    assert [r.rid for r in fin] == [0, 1, 2, 3, 4]
+
+
+def test_step_reports_work_and_idle():
+    srv = make_server(slots=2, max_len=32)
+    assert srv.step() == 0                     # idle: falsy
+    a = srv.submit(prompts(1)[0], max_new=3)
+    assert srv.step() > 0                      # admitted + decoded
+    srv.run()
+    assert a.done
+    assert srv.step() == 0                     # drained again
