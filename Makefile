@@ -1,5 +1,5 @@
 .PHONY: verify test-fast test-workers test-conformance test-measure \
-	test-serve bench bench-full bench-serve
+	test-serve test-kernels bench bench-full bench-serve
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -38,6 +38,14 @@ test-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_serve_decode.py \
 			tests/test_serve_continuous.py tests/test_serve_autotune.py
+
+# Pallas kernel suite + measured perf variants — the jax-compat subset
+# that used to fail wholesale on the CompilerParams/set_mesh renames
+# (the CI test-kernels job keeps it from regressing)
+test-kernels:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_kernels.py \
+			tests/test_perf_variants.py
 
 # Old-vs-new serving benchmark (table 9) on the reduced LM
 bench-serve:

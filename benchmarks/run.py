@@ -94,7 +94,7 @@ def main() -> None:
     from benchmarks import (table1_polybench_a, table2_polybench_b,
                             table3_appsdk, table4_hotspots, table5_serve,
                             table6_workers, table7_ppi, table8_measure,
-                            table9_serving)
+                            table9_serving, table10_diagnosis)
 
     measure = None
     if args.fixed_r or args.ci_rel is not None or args.no_race:
@@ -147,6 +147,7 @@ def main() -> None:
         "7": ("table7_ppi", table7_ppi.main),
         "8": ("table8_measure", table8_measure.main),
         "9": ("table9_serving", table9_serving.main),
+        "10": ("table10_diagnosis", table10_diagnosis.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

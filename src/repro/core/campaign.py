@@ -164,13 +164,17 @@ class Campaign:
                                      stop=stop)
         failures = [(j, o) for j, o in zip(jobs, outcomes)
                     if isinstance(o, Exception)]
+        oks = [o for o in outcomes if isinstance(o, OptResult)]
         if self.db:
             self.db.append(
                 "campaign_end", id=campaign_id,
                 wall_s=round(time.time() - t0, 3),
                 cache=self.cache.stats() if self.cache else None,
-                results=[o.to_dict() for o in outcomes
-                         if isinstance(o, OptResult)],
+                # campaign-level PPI health: how many inherited hints
+                # were suggested vs. actually landed in round winners
+                hints_suggested=sum(o.hints_suggested for o in oks),
+                hints_accepted=sum(o.hints_accepted for o in oks),
+                results=[o.to_dict() for o in oks],
                 errors=[{"job": j.name,
                          "error": f"{type(e).__name__}: {e}"[:300]}
                         for j, e in failures])

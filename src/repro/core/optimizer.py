@@ -99,6 +99,13 @@ class RoundLog:
     best_time_s: float = float("inf")
     improved: bool = False
     stop_reason: str = ""        # non-empty → the loop stopped after this round
+    # bottleneck verdict the round's proposals were routed by
+    # (core.diagnosis.Diagnosis.to_dict(); None → no diagnosis computed)
+    diagnosis: Optional[Dict[str, Any]] = None
+    # per-hint acceptance evidence: for each PPI hint suggested this
+    # round, whether its delta ended up in the round winner
+    # ({delta, source, gain, bottleneck, accepted, pid, ns})
+    hints: List[Dict[str, Any]] = field(default_factory=list)
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -109,6 +116,9 @@ class RoundLog:
         d["candidates"] = [CandidateLog.from_dict(c)
                            for c in d.get("candidates", [])]
         d["best_time_s"] = _de_none(d.get("best_time_s", float("inf")))
+        if d.get("diagnosis") is not None:
+            d["diagnosis"] = dict(d["diagnosis"])
+        d["hints"] = [dict(h) for h in d.get("hints", []) or []]
         return RoundLog(**d)
 
 
@@ -134,6 +144,10 @@ class OptResult:
     timing_reps: int = 0
     timing_reps_fixed: int = 0
     raced_out: int = 0
+    # PPI hint economics: hints suggested across rounds, and how many
+    # were accepted (their delta appeared in the round winner)
+    hints_suggested: int = 0
+    hints_accepted: int = 0
 
     @property
     def speedup(self) -> float:
@@ -161,6 +175,8 @@ class OptResult:
             "timing_reps": self.timing_reps,
             "timing_reps_fixed": self.timing_reps_fixed,
             "raced_out": self.raced_out,
+            "hints_suggested": self.hints_suggested,
+            "hints_accepted": self.hints_accepted,
         }
         if full:
             d["baseline_variant"] = self.baseline_variant
@@ -187,7 +203,9 @@ class OptResult:
             cache_misses=int(d.get("cache_misses", 0)),
             timing_reps=int(d.get("timing_reps", 0)),
             timing_reps_fixed=int(d.get("timing_reps_fixed", 0)),
-            raced_out=int(d.get("raced_out", 0)))
+            raced_out=int(d.get("raced_out", 0)),
+            hints_suggested=int(d.get("hints_suggested", 0)),
+            hints_accepted=int(d.get("hints_accepted", 0)))
         return res
 
 

@@ -32,6 +32,15 @@ multi-process recipe (``repro.core.evalcache``):
   namespaces (the paper's cross-platform inheritance), so provenance is
   informational — nothing is rejected on lookup.
 
+Besides pattern lines, the journal carries **hint-outcome events**
+(``{"ev": "hint", ...}``: this pattern was suggested to that kernel, did
+its delta end up in the round winner?).  Replay folds them into a
+per-(delta, receiving family, bottleneck) acceptance ledger that
+``suggest`` uses to demote patterns that keep being suggested but never
+win; compaction rewrites the ledger as aggregate ``{"ev": "acc", ...}``
+lines.  Patterns themselves are tagged with the diagnosed bottleneck
+they were won under (``core.diagnosis``).
+
 Corrupt journal lines (a crash mid-``os.replace``, a torn concurrent
 write, a legacy truncated file) are tolerated: bad lines are quarantined
 to ``<store>.quarantine`` with a warning instead of poisoning the load.
@@ -63,23 +72,45 @@ class Pattern:
     ts: float = field(default_factory=time.time)
     ns: str = ""                   # namespace recorded under (provenance)
     pid: int = 0                   # recording process (provenance)
+    bottleneck: str = ""           # diagnosis the win was recorded under
 
     def to_dict(self) -> Dict[str, Any]:
         return {"family": self.family, "platform": self.platform,
                 "delta": self.delta, "gain": self.gain,
                 "source_kernel": self.source_kernel, "ts": self.ts,
-                "ns": self.ns, "pid": self.pid}
+                "ns": self.ns, "pid": self.pid,
+                "bottleneck": self.bottleneck}
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "Pattern":
         return Pattern(d["family"], d["platform"], dict(d["delta"]),
                        float(d["gain"]), d.get("source_kernel", "?"),
                        d.get("ts", 0.0), d.get("ns", ""),
-                       int(d.get("pid", 0)))
+                       int(d.get("pid", 0)),
+                       str(d.get("bottleneck", "")))
 
     def merge_key(self) -> Tuple[str, str, str]:
         return (self.family, self.platform,
                 json.dumps(self.delta, sort_keys=True, default=str))
+
+
+def _acc_stats(acc: Dict[Tuple[str, str, str], List[int]],
+               delta_key: str, family: str,
+               bottleneck: str) -> Tuple[int, int]:
+    """Acceptance tally for (delta, receiving family): the exact
+    bottleneck bucket when it has data, else the aggregate across all
+    bottlenecks (a pattern that loses everywhere should be demoted even
+    for a bottleneck it hasn't been tried under)."""
+    if bottleneck:
+        st = acc.get((delta_key, family, bottleneck))
+        if st is not None:
+            return st[0], st[1]
+    n = w = 0
+    for (dk, fam, _bn), (sn, sw) in acc.items():
+        if dk == delta_key and fam == family:
+            n += sn
+            w += sw
+    return n, w
 
 
 class _StoreLock(FileLock):
@@ -107,6 +138,10 @@ class PatternStore:
             else default_namespace()
         self._lock = threading.Lock()
         self._merged: Dict[Tuple[str, str, str], Pattern] = {}
+        # acceptance ledger: (delta_json, receiving_family, bottleneck)
+        # → [times_suggested, times_won], replayed from the journal's
+        # "hint"/"acc" event lines (same provenance conventions)
+        self._acc: Dict[Tuple[str, str, str], List[int]] = {}
         self._offset = 0         # how far into the journal we have read
         self._ino: Optional[int] = None
         self._lines = 0          # journal lines behind the merged view
@@ -149,8 +184,13 @@ class PatternStore:
 
     # ------------------------------------------------------------------
     def record(self, case: KernelCase, platform: str, baseline: Variant,
-               best: Variant, gain: float) -> Optional[Pattern]:
+               best: Variant, gain: float, *,
+               bottleneck: str = "") -> Optional[Pattern]:
         """Summarize the winning strategy as a delta vs the baseline.
+
+        ``bottleneck`` tags the pattern with the diagnosis it was won
+        under (``core.diagnosis`` vocabulary), so later suggestions can
+        prefer patterns that fixed the *same* kind of slowness.
 
         Safe under concurrent campaign workers — threads *and* worker
         processes sharing the journal file: an identical (family,
@@ -164,33 +204,77 @@ class PatternStore:
             # replay — reject it here, like a below-threshold win
             return None
         p = Pattern(case.family, platform, delta, gain, case.name,
-                    ns=self.namespace, pid=os.getpid())
+                    ns=self.namespace, pid=os.getpid(),
+                    bottleneck=bottleneck)
         with self._lock:
             kept, improved = self._merge_locked(p)
             if improved:
-                self._append_locked(p)
+                self._append_locked(p.to_dict())
                 self._maybe_compact_locked()
         return kept
 
+    def record_hint_outcome(self, case: KernelCase, platform: str,
+                            pattern: Pattern, *, won: bool,
+                            bottleneck: str = "") -> None:
+        """Journal that ``pattern`` was suggested to ``case`` and whether
+        its delta ended up in the round winner.  The per-(delta,
+        receiving family, bottleneck) tally feeds ``suggest_patterns``
+        ranking: patterns repeatedly suggested but never winning on the
+        receiving kernel are demoted below fresh equal-gain ones."""
+        ev = {"ev": "hint",
+              "delta": pattern.delta, "family": case.family,
+              "case": case.name, "platform": platform,
+              "bottleneck": bottleneck, "won": bool(won),
+              "ns": self.namespace, "pid": os.getpid(),
+              "ts": time.time()}
+        with self._lock:
+            if self.path:
+                # the append's tail fold counts our own line exactly once
+                self._append_locked(ev)
+                self._maybe_compact_locked()
+            else:
+                self._fold_event_locked(ev)
+
+    def acceptance(self, delta: Dict[str, Any], family: str,
+                   bottleneck: str = "") -> Tuple[int, int]:
+        """(times_suggested, times_won) for a delta on a receiving
+        family — exact bottleneck bucket when it has data, else the
+        aggregate across bottlenecks."""
+        key = json.dumps(delta, sort_keys=True, default=str)
+        with self._lock:
+            self._reload_locked()
+            n, w = self._acc_stats_locked(key, family, bottleneck)
+        return n, w
+
     def suggest(self, case: KernelCase, platform: str,
-                max_hints: int = 4) -> List[Dict[str, Any]]:
+                max_hints: int = 4, *,
+                bottleneck: str = "") -> List[Dict[str, Any]]:
         """Hint deltas, most relevant first (see ``suggest_patterns``)."""
         return [dict(p.delta)
-                for p in self.suggest_patterns(case, platform, max_hints)]
+                for p in self.suggest_patterns(case, platform, max_hints,
+                                               bottleneck=bottleneck)]
 
     def suggest_patterns(self, case: KernelCase, platform: str,
-                         max_hints: int = 4) -> List[Pattern]:
+                         max_hints: int = 4, *,
+                         bottleneck: str = "") -> List[Pattern]:
         """Ranked hints with provenance.  Ordering: patterns sourced
         from *other* kernels strictly before the case's own history
         (its own winning delta is already its baseline — echoing it
         first wastes a hint), then same family + same platform, then
         same family cross-platform (the paper's cross-platform
-        inheritance), then generic high-gain patterns.  The journal
-        tail is re-read first, so hints include wins recorded by other
-        worker processes since the last call."""
+        inheritance), then generic high-gain patterns.  Two learned
+        signals modulate the score: a ×2 boost when the pattern was won
+        under the same diagnosed ``bottleneck`` as the querying round,
+        and a Laplace acceptance rate (wins+1)/(suggestions+2) replayed
+        from the journal's hint-outcome events — a pattern repeatedly
+        suggested to this family but never winning decays below a fresh
+        pattern of equal gain (rate 1/2).  The journal tail is re-read
+        first, so hints include wins recorded by other worker processes
+        since the last call."""
         with self._lock:
             self._reload_locked()
             snapshot = list(self._merged.values())
+            acc = {k: list(v) for k, v in self._acc.items()}
 
         def rank(p: Pattern):
             s = p.gain
@@ -198,6 +282,11 @@ class PatternStore:
                 s *= 4
             if p.platform == platform:
                 s *= 2
+            if bottleneck and p.bottleneck == bottleneck:
+                s *= 2
+            key = json.dumps(p.delta, sort_keys=True, default=str)
+            n, w = _acc_stats(acc, key, case.family, bottleneck)
+            s *= (w + 1.0) / (n + 2.0)
             return (p.source_kernel == case.name, -s)
 
         seen, out = set(), []
@@ -210,6 +299,29 @@ class PatternStore:
             if len(out) >= max_hints:
                 break
         return out
+
+    # ------------------------------------------------------------------
+    def _acc_stats_locked(self, delta_key: str, family: str,
+                          bottleneck: str) -> Tuple[int, int]:
+        return _acc_stats(self._acc, delta_key, family, bottleneck)
+
+    def _fold_event_locked(self, obj: Dict[str, Any]) -> None:
+        """Fold one journal event line into the acceptance ledger.
+        "hint": one suggested-hint outcome; "acc": a compaction-written
+        aggregate (n suggestions, w wins).  Caller holds self._lock."""
+        ev = obj["ev"]
+        key = (json.dumps(obj.get("delta", {}), sort_keys=True,
+                          default=str),
+               str(obj.get("family", "")), str(obj.get("bottleneck", "")))
+        st = self._acc.setdefault(key, [0, 0])
+        if ev == "hint":
+            st[0] += 1
+            st[1] += 1 if obj.get("won") else 0
+        elif ev == "acc":
+            st[0] += int(obj.get("n", 0))
+            st[1] += int(obj.get("w", 0))
+        else:
+            raise ValueError(f"unknown journal event {ev!r}")
 
     # ------------------------------------------------------------------
     def _merge_locked(self, p: Pattern) -> Tuple[Pattern, bool]:
@@ -250,6 +362,7 @@ class PatternStore:
                     (st.st_ino != self._ino or st.st_size < self._offset):
                 self._offset, self._lines = 0, 0
                 self._merged = {}
+                self._acc = {}
             self._ino = st.st_ino
             f.seek(self._offset)
             return f.read()
@@ -270,8 +383,11 @@ class PatternStore:
                 continue
             self._lines += 1
             try:
-                self._merge_locked(Pattern.from_dict(json.loads(
-                    line.decode())))
+                obj = json.loads(line.decode())
+                if isinstance(obj, dict) and "ev" in obj:
+                    self._fold_event_locked(obj)
+                else:
+                    self._merge_locked(Pattern.from_dict(obj))
             except (ValueError, TypeError, KeyError, UnicodeDecodeError):
                 bad.append(line)
         if bad:
@@ -336,24 +452,31 @@ class PatternStore:
             RuntimeWarning, stacklevel=2)
 
     # ------------------------------------------------------------------
-    def _append_locked(self, p: Pattern) -> None:
+    def _append_locked(self, obj: Dict[str, Any]) -> None:
+        """Append one journal line (a pattern dict or an event dict)."""
         if not self.path:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
         with _StoreLock(self.path):
-            append_jsonl(self.path, json_safe(p.to_dict()))
+            append_jsonl(self.path, json_safe(obj))
             # fold the tail through the shared reader (our own line plus
             # anything other processes appended): the line is counted
             # into _lines exactly once and the offset lands at EOF, so
-            # later reloads don't double-count it toward compaction
+            # later reloads don't double-count it toward compaction —
+            # and acceptance events tally exactly once, here
             self._reload_under_flock_locked()
+
+    def _merged_lines(self) -> int:
+        """Lines a compaction would write: one per pattern + one per
+        acceptance-ledger bucket."""
+        return len(self._merged) + len(self._acc)
 
     def _maybe_compact_locked(self) -> None:
         if not self.path or self._lines < self.COMPACT_MIN_LINES:
             return
-        if self._lines <= self.COMPACT_RATIO * max(1, len(self._merged)):
+        if self._lines <= self.COMPACT_RATIO * max(1, self._merged_lines()):
             return
         self._compact_locked()
 
@@ -373,8 +496,13 @@ class PatternStore:
                 for p in self._merged.values():
                     f.write(json.dumps(json_safe(p.to_dict()),
                                        default=str) + "\n")
+                for (dk, fam, bn), (n, w) in self._acc.items():
+                    f.write(json.dumps(json_safe(
+                        {"ev": "acc", "delta": json.loads(dk),
+                         "family": fam, "bottleneck": bn,
+                         "n": n, "w": w}), default=str) + "\n")
             os.replace(tmp, self.path)
             st = os.stat(self.path)
             self._offset, self._ino = st.st_size, st.st_ino
-            self._lines = len(self._merged)
+            self._lines = self._merged_lines()
             self._dirty = False      # the rewrite dropped any bad lines

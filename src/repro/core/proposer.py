@@ -30,9 +30,17 @@ import urllib.request
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core.diagnosis import Diagnosis
 from repro.core.kernelcase import KernelCase, Variant
 from repro.core.patterns import PatternStore
 from repro.core.profiler import VMEM_BYTES, variant_vmem_bytes
+
+
+class ProposalError(RuntimeError):
+    """An LLM reply that cannot become candidates: refusal-shaped text
+    with no JSON span, unparseable JSON, or values outside the case's
+    variant space.  Raised instead of silently evaluating garbage; the
+    ``ProposalError: ...`` string is stable for AER classification."""
 
 
 @dataclass
@@ -47,6 +55,10 @@ class RoundState:
     # boundary (one journal read per round, and exactly what the round
     # record journals); None → the proposer queries its own store
     hints: Optional[List[Dict[str, Any]]] = None
+    # bottleneck verdict for the incumbent variant (core.diagnosis),
+    # computed by the search loop at the round boundary; None → the
+    # proposer falls back to raw-counter thresholds
+    diagnosis: Optional[Diagnosis] = None
 
 
 class Proposer:
@@ -83,7 +95,8 @@ def proposer_from_spec(spec: Dict[str, Any], *,
     kind = spec["kind"]
     if kind == "heuristic":
         return HeuristicProposer(int(spec.get("seed", 0)), patterns,
-                                 spec.get("platform", "cpu"))
+                                 spec.get("platform", "cpu"),
+                                 diagnose=bool(spec.get("diagnose", True)))
     if kind == "direct":
         return DirectProposer()
     if kind == "llm":
@@ -95,19 +108,60 @@ def _valid(case: KernelCase, v: Variant) -> bool:
     return variant_vmem_bytes(v) <= VMEM_BYTES
 
 
+def _json_span(text: str, open_ch: str, close_ch: str, *, what: str):
+    """Parse the outermost ``open_ch…close_ch`` span of an LLM reply.
+    A refusal-shaped reply (no span at all) or malformed JSON raises
+    ``ProposalError`` instead of slicing with find() == -1 — which used
+    to silently parse garbage like ``text[-1:end]``."""
+    start, end = text.find(open_ch), text.rfind(close_ch)
+    if start < 0 or end <= start:
+        raise ProposalError(
+            f"no JSON {what} in LLM reply (refusal-shaped?): "
+            f"{text[:160]!r}")
+    try:
+        return json.loads(text[start:end + 1])
+    except ValueError as e:
+        raise ProposalError(
+            f"malformed JSON {what} in LLM reply: {e}") from None
+
+
+def _validated(case: KernelCase, cand: Dict[str, Any]) -> Dict[str, Any]:
+    """Keep the candidate's in-space keys; a known key with a value
+    outside its choices raises (the model hallucinated a knob setting —
+    evaluating it would fail far from the cause)."""
+    out: Dict[str, Any] = {}
+    for k, val in cand.items():
+        if k not in case.variant_space:
+            continue        # unknown keys are dropped, as before
+        choices = case.variant_space[k]
+        if val not in choices:
+            raise ProposalError(
+                f"value {val!r} for {k!r} is outside "
+                f"{case.name}'s variant space choices {list(choices)}")
+        out[k] = val
+    return out
+
+
 class HeuristicProposer(Proposer):
     name = "heuristic"
 
+    # restructure flags the latency route flips on, in priority order
+    _LATENCY_FLAGS = ("chunked", "one_pass", "precompute_coeffs",
+                      "vectorized_exchange", "use_native_sort")
+
     def __init__(self, seed: int = 0, patterns: Optional[PatternStore] = None,
-                 platform: str = "cpu"):
+                 platform: str = "cpu", *, diagnose: bool = True):
         self.seed = seed
         self.rng = random.Random(seed)
         self.patterns = patterns
         self.platform = platform
+        # False → ignore RoundState.diagnosis and use the legacy raw
+        # thresholds (the undiagnosed baseline benchmarks compare against)
+        self.diagnose = diagnose
 
     def to_spec(self):
         return {"kind": self.name, "seed": self.seed,
-                "platform": self.platform}
+                "platform": self.platform, "diagnose": self.diagnose}
 
     # -- the "LLM" ---------------------------------------------------------
     def propose(self, case, state, n):
@@ -138,42 +192,24 @@ class HeuristicProposer(Proposer):
             push(recipe0)
 
         # 1. Performance Pattern Inheritance hints (paper §3.2)
+        diag = state.diagnosis if self.diagnose else None
         hints = state.hints
         if hints is None and self.patterns is not None:
-            hints = self.patterns.suggest(case, self.platform)
+            hints = self.patterns.suggest(
+                case, self.platform,
+                bottleneck=diag.bottleneck if diag else "")
         for delta in hints or []:
             v = dict(base)
             v.update({k: val for k, val in delta.items()
                       if k in case.variant_space})
             push(v)
 
-        # 2. profile-guided moves
-        ai = state.feedback.get("arithmetic_intensity", 0.0)
-        memory_bound = ai < 240.0   # v5e ridge: 197e12/819e9 ≈ 240 flop/byte
-        # serialization-bound → restructure the scan first (chunking,
-        # unrolling, precomputation, vectorized exchanges)
-        if state.feedback.get("latency_fraction", 0.0) > 0.5:
-            for key in ("chunked", "one_pass", "precompute_coeffs",
-                        "vectorized_exchange", "use_native_sort"):
-                if key in case.variant_space and not base.get(key):
-                    push(dict(base, **{key: True}))
-            for key in ("chunk", "unroll", "block_cols"):
-                if key in case.variant_space:
-                    for c in case.variant_space[key]:
-                        if c != base.get(key):
-                            push(dict(base, **{key: c}))
-        for key, choices in case.variant_space.items():
-            cur = base.get(key)
-            if cur not in choices:
-                continue
-            idx = choices.index(cur)
-            if memory_bound:
-                # bigger tiles / fusion / lower-precision storage first
-                ordered = list(choices[idx + 1:]) + list(choices[:idx])
-            else:
-                ordered = [c for c in choices if c != cur]
-            for cand in ordered[:2]:
-                push(dict(base, **{key: cand}))
+        # 2. profile-guided moves: diagnosis-routed when a verdict is on
+        # the round state, legacy raw-counter thresholds otherwise
+        if diag is not None:
+            self._routed_moves(case, base, diag, push)
+        else:
+            self._legacy_moves(case, state, base, push)
 
         # 3. canonical recipes (what a strong LLM proposes round 1)
         recipe = dict(base)
@@ -195,6 +231,149 @@ class HeuristicProposer(Proposer):
                     v[key] = self.rng.choice(choices)
             push(v)
         return out[:n]
+
+    # -- move sets ---------------------------------------------------------
+    def _legacy_moves(self, case, state, base, push):
+        """Pre-diagnosis heuristics: one AI ridge threshold plus a
+        latency_fraction cutoff, stepping every key a couple of choices
+        at a time (kept verbatim as the undiagnosed baseline
+        ``table10_diagnosis`` compares against)."""
+        ai = state.feedback.get("arithmetic_intensity", 0.0)
+        memory_bound = ai < 240.0   # v5e ridge: 197e12/819e9 ≈ 240 flop/byte
+        # serialization-bound → restructure the scan first (chunking,
+        # unrolling, precomputation, vectorized exchanges)
+        if state.feedback.get("latency_fraction", 0.0) > 0.5:
+            for key in self._LATENCY_FLAGS:
+                if key in case.variant_space and not base.get(key):
+                    push(dict(base, **{key: True}))
+            for key in ("chunk", "unroll", "block_cols"):
+                if key in case.variant_space:
+                    for c in case.variant_space[key]:
+                        if c != base.get(key):
+                            push(dict(base, **{key: c}))
+        for key, choices in case.variant_space.items():
+            cur = base.get(key)
+            if cur not in choices:
+                continue
+            idx = choices.index(cur)
+            if memory_bound:
+                # bigger tiles / fusion / lower-precision storage first
+                ordered = list(choices[idx + 1:]) + list(choices[:idx])
+            else:
+                ordered = [c for c in choices if c != cur]
+            for cand in ordered[:2]:
+                push(dict(base, **{key: cand}))
+
+    def _routed_moves(self, case, base, diag, push):
+        """Diagnosis-routed move sets: each bottleneck class gets the
+        levers that move its dominant term, combined into one decisive
+        recipe first, then single-lever probes, then neighbor steps as
+        the tail explorer."""
+        space = case.variant_space
+        route = diag.bottleneck
+
+        def aligned_choices(key):
+            return [c for c in space.get(key, ())
+                    if isinstance(c, int) and c % 128 == 0]
+
+        def combined(moves):
+            v = dict(base)
+            v.update({k: val for k, val in moves
+                      if k in space and val in space[k]})
+            if v != base:
+                push(v)
+            return v
+
+        if route == "latency":
+            # serialization: restructure first, then depth levers ON TOP
+            # of the restructure (a chunk size means nothing until the
+            # kernel is chunked); unroll sweeps largest-first since more
+            # unrolling always removes serial steps, chunk sweeps in
+            # order since its optimum is interior
+            flags = {k: True for k in self._LATENCY_FLAGS
+                     if k in space and not base.get(k)}
+            if flags:
+                push(dict(base, **flags))
+            for key in ("unroll", "chunk", "block_cols"):
+                if key in space:
+                    sweep = list(space[key])
+                    if key == "unroll":
+                        sweep = sweep[::-1]
+                    for c in sweep:
+                        if c != base.get(key):
+                            push(dict(base, **flags, **{key: c}))
+            for key in flags:                # single-lever fallbacks
+                push(dict(base, **{key: True}))
+        elif route == "memory":
+            # cut HBM traffic: lower-precision storage + every
+            # traffic-restructure flag + the biggest MXU-aligned reuse
+            # tiles, as ONE candidate
+            restructure = [(k, True) for k in
+                           ("fuse_epilogue", "one_pass", "rank1_trick",
+                            "moment_trick", "chunked", "reshape_butterfly")
+                           if k in space and not base.get(k)]
+            moves = [("compute_dtype", "bf16")] + restructure
+            moves += [(key, max(al)) for key in
+                      ("block_m", "block_n", "block_k", "block_q", "block")
+                      if (al := aligned_choices(key))]
+            big = combined(moves)
+            # leave-one-out over the restructure flags: a flag that
+            # helps alone can hurt combined (e.g. one_pass vs the
+            # rank1 restructure), so probe each removal of the recipe
+            for key, _ in restructure:
+                v = dict(big)
+                v[key] = base.get(key, space[key][0])
+                if v != big:
+                    push(v)
+            # single-lever probes of the same moves
+            for key, val in moves:
+                if key in space and val in space[key] \
+                        and base.get(key) != val:
+                    push(dict(base, **{key: val}))
+            # one tile step below the combined recipe in case the
+            # traffic model prefers a mid-size tile
+            for key in ("block_m", "block_n", "block_k", "block_q", "block"):
+                cur = big.get(key)
+                if key in space and cur in space[key]:
+                    i = space[key].index(cur)
+                    if i > 0:
+                        push(dict(big, **{key: space[key][i - 1]}))
+        elif route in ("compute", "occupancy"):
+            # fill the MXU: snap every tile to 128-aligned (bf16 doubles
+            # the peak); occupancy with a VMEM-overflow cause shrinks the
+            # working set instead of just aligning it
+            shrink = route == "occupancy" and diag.vmem_fraction > 0.9
+            moves = [("compute_dtype", "bf16")]
+            for key in ("block_m", "block_n", "block_k", "block_q", "block"):
+                al = aligned_choices(key)
+                if al:
+                    moves.append((key, min(al) if shrink else
+                                  min(al, key=lambda c: (c != 128, c))))
+            combined(moves)
+            for key, val in moves:
+                if key in space and val in space[key] \
+                        and base.get(key) != val:
+                    push(dict(base, **{key: val}))
+            if "fuse_epilogue" in space and not base.get("fuse_epilogue"):
+                push(dict(base, fuse_epilogue=True))
+        elif route == "collective":
+            # shrink exchanged bytes / overlap: vectorized exchanges,
+            # fused single-pass structure, lower-precision payloads
+            combined([("vectorized_exchange", True), ("one_pass", True),
+                      ("compute_dtype", "bf16")])
+            for key in ("vectorized_exchange", "one_pass", "chunked"):
+                if key in space and not base.get(key):
+                    push(dict(base, **{key: True}))
+        # balanced (or anything unrecognized): neighbor probes on every
+        # key, both directions — also the tail explorer for every route
+        for key, choices in space.items():
+            cur = base.get(key)
+            if cur not in choices:
+                continue
+            idx = choices.index(cur)
+            for j in (idx + 1, idx - 1):
+                if 0 <= j < len(choices):
+                    push(dict(base, **{key: choices[j]}))
 
 
 class DirectProposer(Proposer):
@@ -362,7 +541,8 @@ class LLMProposer(Proposer):
 
     PROMPT = """You are optimizing a TPU kernel. Case: {name} (family
 {family}). Current variant: {variant}. Variant space: {space}.
-Profiler feedback: {feedback}. Prior effective patterns: {hints}.
+Profiler feedback: {feedback}. Diagnosis: {diagnosis}.
+Prior effective patterns: {hints}.
 Recent errors: {errors}.
 Reply with a JSON list of up to {n} variant dicts drawn from the space."""
 
@@ -393,23 +573,33 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
         return self._chat(prompt)
 
     def propose(self, case, state, n):
+        diag = state.diagnosis
         hints = state.hints
         if hints is None:
-            hints = (self.patterns.suggest(case, self.platform)
-                     if self.patterns else [])
+            hints = (self.patterns.suggest(
+                case, self.platform,
+                bottleneck=diag.bottleneck if diag else "")
+                if self.patterns else [])
         prompt = self.PROMPT.format(
             name=case.name, family=case.family,
             variant=state.baseline_variant, space=case.variant_space,
-            feedback=state.feedback, hints=hints,
-            errors=state.errors[-3:], n=n)
+            feedback=state.feedback,
+            diagnosis=diag.summary() if diag else "n/a",
+            hints=hints, errors=state.errors[-3:], n=n)
         text = self._round_text(prompt)
-        start, end = text.find("["), text.rfind("]")
-        cands = json.loads(text[start:end + 1])
+        cands = _json_span(text, "[", "]", what="variant list")
+        if not isinstance(cands, list):
+            raise ProposalError(
+                f"LLM reply parsed to {type(cands).__name__}, "
+                f"expected a list of variant dicts")
         out = []
         for c in cands[:n]:
+            if not isinstance(c, dict):
+                raise ProposalError(
+                    f"LLM candidate is {type(c).__name__}, expected a "
+                    f"variant dict")
             v = dict(state.baseline_variant)
-            v.update({k: val for k, val in c.items()
-                      if k in case.variant_space})
+            v.update(_validated(case, c))
             out.append(v)
         return out
 
@@ -419,15 +609,15 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
                   f"dict from space {case.variant_space}.")
         try:
             text = self._chat(prompt)
-            start, end = text.find("{"), text.rfind("}")
-            fix = json.loads(text[start:end + 1])
+            fix = _json_span(text, "{", "}", what="variant dict")
             v = dict(variant)
-            v.update({k: val for k, val in fix.items()
-                      if k in case.variant_space})
+            v.update(_validated(case, fix))
             return v
         except OfflineError:
             raise
         except Exception:
+            # ProposalError included: a garbage or out-of-space repair
+            # reply defers to the deterministic AER rule set
             return None
 
 

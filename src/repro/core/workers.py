@@ -55,6 +55,7 @@ from queue import Queue
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.aer import AER, WorkerFault
+from repro.core.diagnosis import diagnose_feedback
 from repro.core.evalcache import EvalCache, ResultsDB, json_safe
 from repro.core.kernelcase import KernelCase
 from repro.core.measure import (MeasureConfig, default_lease_path,
@@ -149,11 +150,19 @@ def run_case_job(job: CaseJob, platform: Platform, *,
 
     history: List[Dict[str, Any]] = []
     errors: List[str] = []
+    best_ci_rel = 0.0           # rel. CI of the timing behind best_t
+    last_bottleneck = ""
     for d in range(cfg.d_rounds):
         if stop_event is not None and stop_event.is_set():
             res.stop_reason = "stop requested"
             res.mep_log.append(f"round {d}: stopped (stop requested)")
             break
+        # diagnose the incumbent: WHY is it slow?  The verdict routes
+        # the proposer's move set, picks the PPI hint bucket, tags the
+        # round journal, and stamps this round's recorded patterns
+        feedback = platform.profile_feedback(case, best_v, mep.scale)
+        diag = diagnose_feedback(feedback, ci_rel=best_ci_rel)
+        last_bottleneck = diag.bottleneck
         hints: Optional[List[Pattern]] = None
         if patterns is not None:
             # round boundary: fold other workers' journal appends in, so
@@ -161,15 +170,18 @@ def run_case_job(job: CaseJob, platform: Platform, *,
             # process — reaches this round's proposal wave (§3.2 PPI).
             # ONE snapshot per round: the proposer consumes exactly the
             # hint deltas the round record journals below
-            hints = patterns.suggest_patterns(case, platform.name)
+            hints = patterns.suggest_patterns(case, platform.name,
+                                              bottleneck=diag.bottleneck)
         state = RoundState(
             round=d, baseline_variant=best_v, baseline_time_s=best_t,
-            feedback=platform.profile_feedback(case, best_v, mep.scale),
+            feedback=feedback,
             history=history, errors=errors,
             hints=None if hints is None
-            else [dict(p.delta) for p in hints])
+            else [dict(p.delta) for p in hints],
+            diagnosis=diag)
         cands = proposer.propose(case, state, cfg.n_candidates)
-        rl = RoundLog(round=d, baseline_time_s=best_t)
+        rl = RoundLog(round=d, baseline_time_s=best_t,
+                      diagnosis=diag.to_dict())
         for v in cands:
             # the current best is the incumbent: timing a candidate
             # aborts once its optimistic lower bound provably loses
@@ -202,6 +214,8 @@ def run_case_job(job: CaseJob, platform: Platform, *,
             gain = best_t / winner.time_s if winner.time_s else float("inf")
             if winner.time_s < best_t:
                 best_v, best_t = winner.variant, winner.time_s
+                best_ci_rel = winner.ci_half_width_s / winner.time_s \
+                    if winner.time_s else 0.0
             rl.improved = gain > 1.0 + cfg.improve_eps
             if not rl.improved:
                 if gain <= 1.0:
@@ -211,12 +225,31 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                     stop = (f"round gain {gain:.4f}x below threshold "
                             f"{1.0 + cfg.improve_eps:.4f}x")
         rl.stop_reason = stop
+        # per-hint acceptance evidence: did each suggested delta end up
+        # in the round winner?  Journaled into the RoundLog AND fed back
+        # to the store's acceptance ledger, so repeatedly-useless hints
+        # decay out of future suggestion waves
+        for p in hints or []:
+            accepted = rl.improved and all(
+                best_v.get(k) == val for k, val in p.delta.items())
+            rl.hints.append({"delta": dict(p.delta),
+                             "source": p.source_kernel, "gain": p.gain,
+                             "bottleneck": diag.bottleneck,
+                             "accepted": accepted,
+                             "pid": p.pid, "ns": p.ns})
+            res.hints_suggested += 1
+            res.hints_accepted += int(accepted)
+            if patterns is not None:
+                patterns.record_hint_outcome(case, platform.name, p,
+                                             won=accepted,
+                                             bottleneck=diag.bottleneck)
         res.rounds.append(rl)
         if rl.improved and patterns is not None:
             # record the round's cumulative win immediately (not at job
             # end): concurrent cases' next rounds inherit it mid-campaign
             patterns.record(case, platform.name, baseline_v, best_v,
-                            t_base / best_t if best_t else float("inf"))
+                            t_base / best_t if best_t else float("inf"),
+                            bottleneck=diag.bottleneck)
         if db:
             db.append(
                 "round", campaign=campaign_id, job=job.name,
@@ -224,9 +257,8 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                 baseline_time_s=rl.baseline_time_s,
                 best_time_s=rl.best_time_s, improved=rl.improved,
                 stop_reason=stop,
-                ppi_hints=[{"delta": p.delta, "source": p.source_kernel,
-                            "gain": p.gain, "pid": p.pid}
-                           for p in hints or []],
+                diagnosis=rl.diagnosis,
+                ppi_hints=[dict(h) for h in rl.hints],
                 candidates=[{"variant": c.variant, "status": c.status,
                              "time_s": c.time_s, "cached": c.cached,
                              "reps": c.reps,
@@ -256,7 +288,7 @@ def run_case_job(job: CaseJob, platform: Platform, *,
     res.wall_s = time.time() - t_start
     if patterns is not None:
         patterns.record(case, platform.name, baseline_v, best_v,
-                        res.speedup)
+                        res.speedup, bottleneck=last_bottleneck)
     if db:
         db.append("case_result", campaign=campaign_id,
                   job=job.name, **res.to_dict())

@@ -1,0 +1,30 @@
+"""jax version-compatibility shims for the Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(jax 0.4.37 only has the old spelling; newer releases only the new one).
+Every ``pl.pallas_call`` site in this repo routes its compiler params
+through :func:`compiler_params` so the kernels import and run under
+either spelling instead of raising ``AttributeError`` on one of them.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _params_cls():
+    """Resolve whichever CompilerParams spelling this jax ships."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover — no known jax lacks both
+        raise AttributeError(
+            "jax.experimental.pallas.tpu has neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cls
+
+
+def compiler_params(**kwargs: Any):
+    """``pltpu.CompilerParams(**kwargs)`` under whichever name exists."""
+    return _params_cls()(**kwargs)

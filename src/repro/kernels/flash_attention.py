@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG_INF = -1e30
 
 
@@ -92,7 +94,7 @@ def flash_attention_bhsd(q, k, v, *, block_q: int = 128, block_k: int = 128,
             pltpu.VMEM((block_q,), jnp.float32),       # running denom
             pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

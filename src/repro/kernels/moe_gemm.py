@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     ki = pl.program_id(3)
@@ -54,7 +56,7 @@ def grouped_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, ki: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

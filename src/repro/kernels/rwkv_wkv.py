@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
                 chunk: int):
@@ -73,7 +75,7 @@ def wkv_pallas(r, k, v, lw, u, *, chunk: int = 64, interpret: bool = True):
         out_specs=pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, V), r.dtype),
         scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, lwf, uf)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _ssd_kernel(u_ref, la_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
     ci = pl.program_id(2)
@@ -82,7 +84,7 @@ def ssd_pallas(xh, dt, a_log, B_t, C_t, *, chunk: int = 128,
                                lambda b, h, ci: (b, ci, h, 0)),
         out_shape=jax.ShapeDtypeStruct((Bb, S, H, P), xh.dtype),
         scratch_shapes=[pltpu.VMEM((block_h, P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, la_step, B_t, C_t)

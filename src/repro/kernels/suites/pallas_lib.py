@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _fit(b: int, dim: int) -> int:
     b = max(1, min(b, dim))
@@ -72,7 +74,7 @@ def matmul_pallas(a, b, c=None, *, block_m=128, block_n=128, block_k=128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)
@@ -103,7 +105,7 @@ def reduce_sum_pallas(x, *, block: int = 4096, interpret: bool = True):
         out_specs=pl.BlockSpec((1,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
         scratch_shapes=[pltpu.VMEM((), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x)[0]
@@ -126,7 +128,7 @@ def elementwise_pallas(fn, *arrays, block: int = 8192,
         in_specs=[pl.BlockSpec((blk,), lambda i: (i,)) for _ in arrays],
         out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), arrays[0].dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*arrays)

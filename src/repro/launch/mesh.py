@@ -60,6 +60,28 @@ def make_ctx(mesh, preset: str = "default", **kw) -> ShardCtx:
                     rules=rules, **kw)
 
 
+try:                                  # modern spelling (jax >= 0.5)
+    shard_map = jax.shard_map
+except AttributeError:                # jax 0.4.x: experimental home, and
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+    # check_vma was spelled check_rep there
+
+    def shard_map(f, *, check_vma=True, **kw):
+        return _shard_map_04(f, check_rep=check_vma, **kw)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for sharded computation.
+
+    ``jax.set_mesh`` is the modern spelling; jax 0.4.x doesn't have it —
+    there the ``Mesh`` object is its own context manager.  Every caller
+    (dryrun, the distributed tests) routes through this one shim instead
+    of repeating the ``hasattr`` fallback."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_smoke_mesh(n: int = 0):
     """Mesh over whatever local devices exist (tests use subprocesses with
     --xla_force_host_platform_device_count to get >1)."""

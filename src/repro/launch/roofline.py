@@ -128,6 +128,17 @@ class Roofline:
         peak = self.n_chips * hw.PEAK_FLOPS_BF16
         return (self.model_flops_total / peak) / self.step_s if self.step_s else 0.0
 
+    def diagnose(self):
+        """Classify the bottleneck of this cell (core.diagnosis vocab).
+        Dry-run cells have no wall-clock CI and no launch-latency model,
+        so latency_s=0 — the classifier splits compute/memory/collective."""
+        from repro.core.diagnosis import classify
+        return classify(self.compute_s, self.memory_s, 0.0,
+                        self.collective_s,
+                        arithmetic_intensity=(
+                            self.flops_per_chip / self.bytes_per_chip
+                            if self.bytes_per_chip else 0.0))
+
     def to_dict(self) -> Dict:
         d = {
             "flops_per_chip": self.flops_per_chip,
@@ -144,6 +155,7 @@ class Roofline:
             "step_s": self.step_s,
             "useful_flops_ratio": self.useful_flops_ratio,
             "mfu_bound": self.model_flops_utilization,
+            "diagnosis": self.diagnose().to_dict(),
         }
         if self.collectives is not None:
             d["collective_bytes_by_kind"] = self.collectives.bytes_by_kind
