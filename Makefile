@@ -1,5 +1,5 @@
 .PHONY: verify test-fast test-workers test-conformance test-measure \
-	test-serve test-kernels bench bench-full bench-serve
+	test-serve test-kernels test-population bench bench-full bench-serve
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -46,6 +46,13 @@ test-kernels:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_kernels.py \
 			tests/test_perf_variants.py
+
+# Population search: expert personae, tournament racing, island
+# migration — includes the slow cross-executor migration/conformance
+# legs (the CI test-population job)
+test-population:
+	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_population.py
 
 # Old-vs-new serving benchmark (table 9) on the reduced LM
 bench-serve:

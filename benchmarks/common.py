@@ -23,7 +23,8 @@ from typing import Dict, List, Optional
 
 from repro.core import (Campaign, CaseJob, DirectProposer, EvalCache,
                         HeuristicProposer, MeasureConfig, MEPConstraints,
-                        OptConfig, PatternStore, ResultsDB)
+                        OptConfig, PatternStore, PopulationConfig,
+                        ResultsDB)
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -50,6 +51,9 @@ class BenchContext:
     measure: Optional[MeasureConfig] = None   # adaptive-engine policy
     serve_slots: Optional[int] = None         # table 9: KV slot pool size
     serve_buckets: Optional[List[int]] = None  # table 9: prefill buckets
+    # population-search policy (table 11; None → each table's default /
+    # the greedy loop elsewhere)
+    population: Optional[PopulationConfig] = None
 
     def campaign(self, platform) -> Campaign:
         # --workers applies to measured platforms too: their wall-clock

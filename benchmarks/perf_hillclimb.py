@@ -1,15 +1,22 @@
-"""§Perf hillclimb driver: run the three chosen cells through their
-candidate-change ladders, appending records to results/hillclimb.jsonl.
+"""Perf hillclimb driver: run the three chosen launch cells through
+their candidate-change ladders, appending one record per experiment to
+``results/hillclimb.jsonl``.
 
-Each invocation = one hypothesis→change→measure cycle from EXPERIMENTS.md
-§Perf; the napkin math lives there, this script produces the numbers.
+Each entry below is one hypothesis → change → measure cycle against the
+dry-run launch model (``repro.launch.dryrun``); completed labels are
+skipped on re-runs, so the ladder is resumable.  Registered in the
+benchmark runner:
+
+    PYTHONPATH=src python -m benchmarks.run --tables hillclimb
+
+or standalone (optionally filtering by label prefix):
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [PREFIX]
 """
 import json
 import os
 import sys
 import traceback
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 EXPERIMENTS = [
     # (label, arch, shape, kwargs)
@@ -73,9 +80,11 @@ EXPERIMENTS = [
 ]
 
 
-def main():
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    out_path = "results/hillclimb.jsonl"
+def main(ctx=None, only=None):
+    """Run the remaining ladder entries; returns a summary dict (the
+    ``benchmarks.run`` table contract — ``ctx`` is accepted for
+    uniformity but the ladder owns its own results file)."""
+    out_path = os.path.join("results", "hillclimb.jsonl")
     done = set()
     if os.path.exists(out_path):
         for line in open(out_path):
@@ -83,23 +92,35 @@ def main():
                 done.add(json.loads(line)["label"])
             except Exception:
                 pass
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
     from repro.launch.dryrun import run_cell
+    ran, failed = [], []
     for label, arch, shape, kw in EXPERIMENTS:
         if label in done or (only and not label.startswith(only)):
             continue
         print(f"== {label} ==", flush=True)
         try:
+            kw = dict(kw)            # EXPERIMENTS stays re-runnable
             mp = kw.pop("_multi_pod", False)
             rec = run_cell(arch, shape, multi_pod=mp, **kw)
             rec["label"] = label
+            ran.append(label)
         except Exception as e:
             rec = {"label": label, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-1500:]}
+            failed.append(label)
             print("FAIL:", e, flush=True)
         with open(out_path, "a") as f:
             f.write(json.dumps(rec) + "\n")
+    summary = {"table": "perf_hillclimb", "ran": ran, "failed": failed,
+               "skipped_done": sorted(done), "out": out_path}
+    print(f"# perf_hillclimb: {len(ran)} ran, {len(failed)} failed, "
+          f"{len(done)} already done -> {out_path}", flush=True)
+    return summary
 
 
 if __name__ == "__main__":
-    main()
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    main(only=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -85,16 +85,27 @@ def main() -> None:
     ap.add_argument("--buckets", default=None, metavar="N,N,...",
                     help="table 9: prefill length buckets (default: "
                          "power-of-two ladder up to max_len)")
+    ap.add_argument("--pop-size", type=int, default=None,
+                    help="table 11: population size (individuals kept)")
+    ap.add_argument("--pop-generations", type=int, default=None,
+                    help="table 11: generation cap")
+    ap.add_argument("--pop-per-persona", type=int, default=None,
+                    help="table 11: candidates per expert per wave")
+    ap.add_argument("--no-migrate", action="store_true",
+                    help="table 11: disable island migration through "
+                         "the PatternStore")
     args = ap.parse_args()
     if args.full:
         os.environ["REPRO_BENCH_FULL"] = "1"
 
-    from repro.core import EvalCache, MeasureConfig, PatternStore, ResultsDB
+    from repro.core import (EvalCache, MeasureConfig, PatternStore,
+                            PopulationConfig, ResultsDB)
     from benchmarks.common import BenchContext
-    from benchmarks import (table1_polybench_a, table2_polybench_b,
-                            table3_appsdk, table4_hotspots, table5_serve,
-                            table6_workers, table7_ppi, table8_measure,
-                            table9_serving, table10_diagnosis)
+    from benchmarks import (perf_hillclimb, table1_polybench_a,
+                            table2_polybench_b, table3_appsdk,
+                            table4_hotspots, table5_serve, table6_workers,
+                            table7_ppi, table8_measure, table9_serving,
+                            table10_diagnosis, table11_population)
 
     measure = None
     if args.fixed_r or args.ci_rel is not None or args.no_race:
@@ -103,6 +114,16 @@ def main() -> None:
             ci_rel=args.ci_rel if args.ci_rel is not None
             else MeasureConfig.ci_rel,
             race=not (args.fixed_r or args.no_race))
+
+    population = None
+    if args.pop_size or args.pop_generations or args.pop_per_persona \
+            or args.no_migrate:
+        base = PopulationConfig()
+        population = PopulationConfig(
+            size=args.pop_size or base.size,
+            generations=args.pop_generations or base.generations,
+            per_persona=args.pop_per_persona or base.per_persona,
+            migrate=not args.no_migrate)
 
     serve_buckets = [int(b) for b in args.buckets.split(",")] \
         if args.buckets else None
@@ -127,7 +148,7 @@ def main() -> None:
             db=ResultsDB(os.path.join(res_dir, "campaign.jsonl")),
             max_workers=args.workers, executor=args.executor,
             measure=measure, serve_slots=args.slots,
-            serve_buckets=serve_buckets)
+            serve_buckets=serve_buckets, population=population)
     else:           # --out '': leave no state on disk
         cache = None if args.no_cache else EvalCache()
         store = PatternStore(args.patterns) \
@@ -135,7 +156,8 @@ def main() -> None:
         ctx = BenchContext(store=store, cache=cache,
                            max_workers=args.workers, executor=args.executor,
                            measure=measure, serve_slots=args.slots,
-                           serve_buckets=serve_buckets)
+                           serve_buckets=serve_buckets,
+                           population=population)
 
     tables = {
         "1": ("table1_polybench_a", table1_polybench_a.main),
@@ -148,6 +170,8 @@ def main() -> None:
         "8": ("table8_measure", table8_measure.main),
         "9": ("table9_serving", table9_serving.main),
         "10": ("table10_diagnosis", table10_diagnosis.main),
+        "11": ("table11_population", table11_population.main),
+        "hillclimb": ("perf_hillclimb", perf_hillclimb.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]
     for tid in table_ids:

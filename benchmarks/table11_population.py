@@ -1,0 +1,300 @@
+"""Table 11 — Population search: multi-expert personae, tournament
+racing, island migration (ROADMAP "Population search"; not a paper
+table).
+
+The paper's §3.2 loop advances one lineage per kernel.  This table
+measures what the ``core.population`` engine buys on top of the
+strongest greedy configuration (table 10's ``diagnose=True`` leg,
+replicated here verbatim as the baseline): a per-case population whose
+generations fan out to four expert personae, race every challenger
+against a tournament-sampled opponent, and exchange winning deltas
+between concurrent cases through the shared PatternStore journal.
+
+Four legs:
+
+* **greedy**     — ``HeuristicProposer(diagnose=True)``, the table 10
+  baseline: one variant lineage, no pattern store.
+* **population** — the same cases under ``PopulationConfig``: expert
+  waves + tournament racing + island migration over a width-1 fabric
+  (sequential cases, so migration order is deterministic).
+* **population-subprocess** — the population leg through the worker
+  fabric with a journaled PatternStore and ResultsDB; the journal must
+  carry persona provenance, raced-kill counts, and migration events on
+  every generation record (the wire-path acceptance gate).
+* **racing**     — a measured (CPU wall-clock) slice: tournament
+  racing must actually retire challengers (``raced_kills > 0``) —
+  the analytic platform never races, so this is the only leg that can
+  demonstrate the kill mechanism end-to-end.
+
+The headline metric is **paid evals to best-known**: walking each
+leg's candidates in evaluation order, how many cache-miss evaluations
+it spends before first hitting the best quality EITHER leg ever
+reaches on that case (censored at the leg's total spend when it never
+gets there).  The acceptance gate: on >= 4 kernel families the
+population leg reaches equal-or-better winners with >= 1.3x fewer
+paid evals to best.
+
+    PYTHONPATH=src python -m benchmarks.run --tables 11
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, Optional
+
+from benchmarks.common import ensure_ctx
+from repro.core import (Campaign, CaseJob, CPUPlatform, EvalCache,
+                        HeuristicProposer, InProcessExecutor,
+                        MeasureConfig, MEPConstraints, OptConfig,
+                        PatternStore, PopulationConfig, ResultsDB,
+                        SubprocessExecutor, TPUModelPlatform, get_case)
+
+# multi-case families are where island migration pays: the first case
+# of a family pays the expert-wave exploration, its siblings inherit
+# the winning delta as a generation-0 seed.  Order matters on the
+# width-1 fabric — each family leads with its best teacher (the case
+# whose winning delta transfers whole to its siblings; gemver's
+# optimum is a superset of the other matvec winners, so seeding it
+# FROM a sibling's partial delta would cost an extra generation).
+# attention_prefill runs first: single-case, so its only edge is the
+# bottleneck-routed expert nailing eval 1 before any store seeds
+# exist.  scan / sort ride along as controls where greedy's routed
+# recipe is already near-optimal (tiny 2-key spaces → the expert wave
+# can only tie or pay overhead).
+CASES = ["attention_prefill",                         # attention
+         "gemver", "atax", "bicg", "gesummv",         # matvec
+         "gemm", "2mm", "3mm", "syrk", "syr2k",       # matmul
+         "adi", "dwthaar1d", "simpleconvolution",     # stencil
+         "binomialoption", "rwkv_wkv", "mamba_ssd",   # scan
+         "bitonicsort"]                               # sort
+CFG = OptConfig(d_rounds=8, n_candidates=2, r=5, k=1)
+POP = PopulationConfig(size=4, generations=6, per_persona=1)
+CONS = MEPConstraints(r=5, k=1, t_max_s=2.0)
+SEED = 0
+TIE = 1e-9          # equal-quality epsilon on time comparisons
+
+
+def _evals_to_target(res, target_s: float) -> Dict:
+    """Paid (cache-miss) evaluations spent, in evaluation order, before
+    the first full-fidelity candidate at or below ``target_s``
+    (unrounded seconds); censored at the leg's total paid spend when
+    never reached."""
+    paid = 0
+    for rl in res.rounds:
+        for c in rl.candidates:
+            if not c.cached:
+                paid += 1
+            if c.status == "ok" and not c.raced_out \
+                    and c.time_s <= target_s * (1 + TIE):
+                return {"evals": paid, "reached": True}
+    total = sum(1 for rl in res.rounds for c in rl.candidates
+                if not c.cached)
+    return {"evals": total, "reached": False}
+
+
+def _leg(tag: str, *, executor, tmp: str, population=None,
+         store=None, db=None) -> Dict:
+    jobs = [CaseJob(get_case(n),
+                    HeuristicProposer(SEED, platform="tpu-model",
+                                      diagnose=True),
+                    cfg=CFG, constraints=CONS, seed=SEED) for n in CASES]
+    camp = Campaign(TPUModelPlatform(), patterns=store, db=db,
+                    cache=EvalCache(os.path.join(tmp, f"ec_{tag}.jsonl")),
+                    executor=executor, population=population)
+    t0 = time.time()
+    results = camp.run(jobs)
+    wall = time.time() - t0
+    per_case = {}
+    for res in results:
+        per_case[res.case_name] = {
+            "family": get_case(res.case_name).family,
+            "rounds": len(res.rounds),
+            "evals": res.cache_misses,
+            "best_us": round(res.best_time_s * 1e6, 3),
+            "speedup": round(res.speedup, 4),
+            "raced_kills": res.raced_kills,
+            "migrations_in": res.migrations_in,
+            "migrations_joined": res.migrations_joined,
+            "migrations_out": res.migrations_out,
+            "persona_stats": res.persona_stats,
+            "_res": res,           # stripped before serialization
+        }
+    leg = {
+        "population": population is not None,
+        "wall_s": round(wall, 2),
+        "total_evals": sum(c["evals"] for c in per_case.values()),
+        "cases": per_case,
+    }
+    print(f"#   {tag}: {leg['total_evals']} paid evals, "
+          f"{sum(c['raced_kills'] for c in per_case.values())} raced "
+          f"kills, "
+          f"{sum(c['migrations_joined'] for c in per_case.values())} "
+          f"migrants joined, {wall:.1f}s wall", flush=True)
+    return leg
+
+
+def _racing_leg(tmp: str) -> Dict:
+    """Measured slice: CPU wall clock, tight CI budget — the tournament
+    must retire challengers at r_min (raced_kills > 0)."""
+    pcfg = PopulationConfig(size=3, generations=3, per_persona=2,
+                            migrate=False)
+    # r=30 gives racing headroom above r_min; the tight ci_rel keeps
+    # the timer measuring until the race decision fires (otherwise
+    # losers stop early as cheap full-fidelity records instead)
+    cfg = OptConfig(d_rounds=8, n_candidates=2, r=30, k=3,
+                    measure=MeasureConfig(ci_rel=0.001))
+    jobs = [CaseJob(get_case(n),
+                    HeuristicProposer(SEED, platform="cpu"),
+                    cfg=cfg, constraints=MEPConstraints(r=30, k=3,
+                                                        t_max_s=2.0),
+                    seed=SEED)
+            for n in ("atax", "bicg")]
+    camp = Campaign(CPUPlatform(),
+                    cache=EvalCache(os.path.join(tmp, "ec_race.jsonl")),
+                    executor=InProcessExecutor(1), population=pcfg)
+    t0 = time.time()
+    results = camp.run(jobs)
+    leg = {
+        "platform": "cpu",
+        "wall_s": round(time.time() - t0, 2),
+        "cases": {r.case_name: {
+            "raced_kills": r.raced_kills,
+            "evals": r.cache_misses,
+            "timing_reps": r.timing_reps,
+            "timing_reps_fixed": r.timing_reps_fixed,
+            "speedup": round(r.speedup, 3),
+        } for r in results},
+        "raced_kills": sum(r.raced_kills for r in results),
+    }
+    print(f"#   racing (cpu): {leg['raced_kills']} tournament kills, "
+          f"{sum(r.timing_reps for r in results)} reps paid vs "
+          f"{sum(r.timing_reps_fixed for r in results)} fixed-R, "
+          f"{leg['wall_s']}s wall", flush=True)
+    return leg
+
+
+def _journal_evidence(db_path: str) -> Dict:
+    """Wire-path acceptance gate: generation records written by the
+    *subprocess* workers must carry persona provenance, raced-kill
+    counts, and migration events."""
+    rounds = list(ResultsDB(db_path).records("round"))
+    with_personae = [r for r in rounds if r.get("personae")]
+    migrations = [m for r in rounds for m in r.get("migrations", [])]
+    return {
+        "round_records": len(rounds),
+        "rounds_with_personae": len(with_personae),
+        "rounds_with_raced_kills_field": sum(
+            1 for r in rounds if "raced_kills" in r),
+        "personae_seen": sorted({p for r in with_personae
+                                 for p in r["personae"]}),
+        "migration_events": len(migrations),
+        "migrations_joined": sum(1 for m in migrations if m.get("joined")),
+        "candidates_with_persona": sum(
+            1 for r in rounds for c in r.get("candidates", [])
+            if c.get("persona")),
+    }
+
+
+def main(ctx=None) -> Dict:
+    bench = ensure_ctx(ctx)      # table 11 owns its stores: legs must
+    pop_cfg = bench.population or POP       # not share with other tables
+    tmp = tempfile.mkdtemp(prefix="pop_demo_")
+    print(f"# population demo: cases={CASES}, pop size={pop_cfg.size}, "
+          f"generations={pop_cfg.generations}, "
+          f"per_persona={pop_cfg.per_persona}", flush=True)
+    try:
+        greedy = _leg("greedy", executor=InProcessExecutor(1), tmp=tmp)
+        pop = _leg("population", executor=InProcessExecutor(1), tmp=tmp,
+                   population=pop_cfg,
+                   store=PatternStore(os.path.join(tmp, "pat_pop.jsonl")))
+        db_path = os.path.join(tmp, "db_sub.jsonl")
+        sub = _leg("population-subprocess", executor=SubprocessExecutor(2),
+                   tmp=tmp, population=pop_cfg,
+                   store=PatternStore(os.path.join(tmp, "pat_sub.jsonl")),
+                   db=ResultsDB(db_path))
+        evidence = _journal_evidence(db_path)
+        racing = _racing_leg(tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # -- paid-evals-to-best-known, per case then per family ------------
+    per_family: Dict[str, Dict] = {}
+    for n in CASES:
+        g, p = greedy["cases"][n], pop["cases"][n]
+        g_res, p_res = g.pop("_res"), p.pop("_res")
+        # target from the UNROUNDED times: best quality either leg ever
+        # reached on this case (the display best_us is 3-decimal µs,
+        # which would censor sub-rounding-error matches)
+        target = min(g_res.best_time_s, p_res.best_time_s)
+        ge = _evals_to_target(g_res, target)
+        pe = _evals_to_target(p_res, target)
+        sub["cases"][n].pop("_res", None)
+        g["evals_to_best"], g["reached_best"] = ge["evals"], ge["reached"]
+        p["evals_to_best"], p["reached_best"] = pe["evals"], pe["reached"]
+        fam = g["family"]
+        f = per_family.setdefault(fam, {
+            "cases": 0, "equal_or_better_winners": 0,
+            "evals_to_best_greedy": 0, "evals_to_best_population": 0})
+        f["cases"] += 1
+        f["equal_or_better_winners"] += int(
+            p_res.best_time_s <= g_res.best_time_s * (1 + TIE))
+        f["evals_to_best_greedy"] += ge["evals"]
+        f["evals_to_best_population"] += pe["evals"]
+    for f in per_family.values():
+        f["evals_ratio"] = round(
+            f["evals_to_best_greedy"]
+            / max(1, f["evals_to_best_population"]), 3)
+    improved = sorted(
+        fam for fam, f in per_family.items()
+        if f["equal_or_better_winners"] == f["cases"]
+        and f["evals_to_best_greedy"]
+        >= 1.3 * f["evals_to_best_population"])
+
+    rec = {
+        "table": "table11_population",
+        "cases": CASES,
+        "cfg": {"d_rounds": CFG.d_rounds, "n_candidates": CFG.n_candidates,
+                "r": CFG.r, "k": CFG.k},
+        "population_cfg": pop_cfg.to_dict(),
+        "legs": {"greedy": greedy, "population": pop,
+                 "population_subprocess": sub, "racing": racing},
+        "per_family": per_family,
+        "families_improved": improved,
+        "evals_to_best_greedy": sum(
+            f["evals_to_best_greedy"] for f in per_family.values()),
+        "evals_to_best_population": sum(
+            f["evals_to_best_population"] for f in per_family.values()),
+        "journal_evidence": evidence,
+    }
+    rec["evals_to_best_ratio"] = round(
+        rec["evals_to_best_greedy"]
+        / max(1, rec["evals_to_best_population"]), 3)
+    print(f"# table11_population: evals-to-best "
+          f"{rec['evals_to_best_greedy']} (greedy) -> "
+          f"{rec['evals_to_best_population']} (population), "
+          f"{rec['evals_to_best_ratio']}x; families with equal-or-better "
+          f"winners at >=1.3x fewer evals: {improved} "
+          f"({len(improved)}/{len(per_family)}); racing leg kills: "
+          f"{racing['raced_kills']}; journal: "
+          f"{evidence['rounds_with_personae']}/"
+          f"{evidence['round_records']} generations with persona stats, "
+          f"{evidence['migration_events']} migration events", flush=True)
+    out = os.path.join("results", "table11_population.json")
+    try:
+        os.makedirs("results", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"# wrote {out}", flush=True)
+    except OSError:
+        pass
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    main()

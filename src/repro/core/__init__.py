@@ -18,8 +18,11 @@ from repro.core.aer import AER, RepairRecord, WorkerFault
 from repro.core.patterns import Pattern, PatternStore
 from repro.core.proposer import (DirectProposer, HeuristicProposer,
                                  LLMBatcher, LLMProposer, OfflineError,
-                                 Proposer, RoundState, make_proposer,
+                                 PERSONAE, Proposer, RoundState,
+                                 make_proposer, persona_proposers,
                                  proposer_from_spec)
+from repro.core.population import (Individual, Population,
+                                   PopulationConfig)
 from repro.core.evalcache import (EvalCache, EvalRecord, ResultsDB,
                                   canonical_spec, default_namespace,
                                   spec_key)

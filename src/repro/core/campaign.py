@@ -74,6 +74,7 @@ from repro.core.measure import MeasureConfig, default_lease_path
 from repro.core.optimizer import OptResult
 from repro.core.patterns import PatternStore
 from repro.core.profiler import Platform
+from repro.core.population import PopulationConfig
 from repro.core.workers import (CaseJob, Executor, InProcessExecutor,
                                 WorkerContext, make_executor)
 
@@ -93,6 +94,7 @@ class Campaign:
                  executor: Union[Executor, str, None] = None,
                  measure: Optional[MeasureConfig] = None,
                  lease_path: Optional[str] = None,
+                 population: Optional[PopulationConfig] = None,
                  verbose: bool = False):
         self.platform = platform
         if isinstance(patterns, str):
@@ -103,6 +105,9 @@ class Campaign:
         self.cache = cache
         self.db = db
         self.measure = measure
+        # campaign-wide population-search policy (per-job
+        # OptConfig.population overrides it); None → greedy loop
+        self.population = population
         # measured platforms fan out (no one-worker clamp any more):
         # all wall-clock slices — every thread, every worker process —
         # serialize on one lease file, by default next to the eval
@@ -159,7 +164,8 @@ class Campaign:
         ctx = WorkerContext(platform=self.platform, cache=self.cache,
                             patterns=self.patterns, db=self.db,
                             verbose=self.verbose, measure=self.measure,
-                            lease_path=self.lease_path)
+                            lease_path=self.lease_path,
+                            population=self.population)
         outcomes = self.executor.run(jobs, ctx, campaign_id=campaign_id,
                                      stop=stop)
         failures = [(j, o) for j, o in zip(jobs, outcomes)

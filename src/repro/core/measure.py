@@ -59,6 +59,12 @@ class MeasureConfig:
     ci_rel: float = 0.05      # stop when CI half-width ≤ ci_rel × mean
     z: float = 1.96           # normal CI multiplier (95%)
     race: bool = True         # incumbent racing (needs incumbent_s)
+    # tournament slack (population search): racing aborts once the
+    # optimistic lower bound cannot beat incumbent × (1 − race_margin),
+    # so challengers within the margin of their tournament opponent
+    # still get a full timing (0.0 → classic strict racing).  Like
+    # ``race`` it only truncates, so it is not part of the cache key.
+    race_margin: float = 0.0
     warmup: int = 1           # warmup calls (each blocked on) before timing
     lease_path: Optional[str] = None   # cross-process timing arbiter file
     lease_slice: int = 5      # max reps timed per lease hold
@@ -250,7 +256,8 @@ def measure_callable(run_once: Callable[[], float], *, r: int, k: int,
                 # same rep cost a raced-out stamp would have paid
                 break
             if cfg.race and incumbent_s is not None \
-                    and min(times) - hw > incumbent_s:
+                    and min(times) - hw \
+                    > incumbent_s * (1.0 - cfg.race_margin):
                 # even the optimistic lower bound loses to the
                 # incumbent: further reps cannot change the argmin,
                 # stop paying for them

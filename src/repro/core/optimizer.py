@@ -46,15 +46,22 @@ class OptConfig:
     # reps under the R cap, incumbent racing on); the campaign fills in
     # the cross-process timing lease path
     measure: Optional[MeasureConfig] = None
+    # population-search knobs (core.population.PopulationConfig); None →
+    # the greedy one-variant-per-round loop.  The campaign-level default
+    # (WorkerContext.population) applies when this is None.
+    population: Optional[Any] = None
 
     def to_dict(self) -> Dict[str, Any]:
-        return asdict(self)            # nested MeasureConfig → plain dict
+        return asdict(self)            # nested dataclasses → plain dicts
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "OptConfig":
         d = dict(d)
         if isinstance(d.get("measure"), dict):
             d["measure"] = MeasureConfig.from_dict(d["measure"])
+        if isinstance(d.get("population"), dict):
+            from repro.core.population import PopulationConfig
+            d["population"] = PopulationConfig.from_dict(d["population"])
         return OptConfig(**d)
 
 
@@ -80,6 +87,9 @@ class CandidateLog:
     ci_half_width_s: float = 0.0
     raced_out: bool = False
     lower_bound_s: float = 0.0
+    # population search: which expert persona (or "seed" / "migrant")
+    # proposed this candidate; "" → greedy loop
+    persona: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -106,6 +116,14 @@ class RoundLog:
     # round, whether its delta ended up in the round winner
     # ({delta, source, gain, bottleneck, accepted, pid, ns})
     hints: List[Dict[str, Any]] = field(default_factory=list)
+    # population search (a RoundLog is one generation there): per-persona
+    # provenance {persona: {proposed, evaluated, raced, joined}}, how
+    # many challengers tournament racing retired at r_min, and the
+    # cross-case migration events this generation
+    # ({source, delta, gain, joined})
+    personae: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    raced_kills: int = 0
+    migrations: List[Dict[str, Any]] = field(default_factory=list)
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -119,6 +137,10 @@ class RoundLog:
         if d.get("diagnosis") is not None:
             d["diagnosis"] = dict(d["diagnosis"])
         d["hints"] = [dict(h) for h in d.get("hints", []) or []]
+        d["personae"] = {k: dict(v)
+                         for k, v in (d.get("personae") or {}).items()}
+        d["raced_kills"] = int(d.get("raced_kills", 0))
+        d["migrations"] = [dict(m) for m in d.get("migrations", []) or []]
         return RoundLog(**d)
 
 
@@ -148,6 +170,15 @@ class OptResult:
     # were accepted (their delta appeared in the round winner)
     hints_suggested: int = 0
     hints_accepted: int = 0
+    # population-search evidence (zero/empty under the greedy loop):
+    # aggregated per-persona stats, tournament-racing kills, and island
+    # migration counters (candidates tried / joined the population /
+    # deltas exported to other cases via the PatternStore)
+    persona_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    raced_kills: int = 0
+    migrations_in: int = 0
+    migrations_joined: int = 0
+    migrations_out: int = 0
 
     @property
     def speedup(self) -> float:
@@ -177,6 +208,11 @@ class OptResult:
             "raced_out": self.raced_out,
             "hints_suggested": self.hints_suggested,
             "hints_accepted": self.hints_accepted,
+            "persona_stats": self.persona_stats,
+            "raced_kills": self.raced_kills,
+            "migrations_in": self.migrations_in,
+            "migrations_joined": self.migrations_joined,
+            "migrations_out": self.migrations_out,
         }
         if full:
             d["baseline_variant"] = self.baseline_variant
@@ -205,7 +241,13 @@ class OptResult:
             timing_reps_fixed=int(d.get("timing_reps_fixed", 0)),
             raced_out=int(d.get("raced_out", 0)),
             hints_suggested=int(d.get("hints_suggested", 0)),
-            hints_accepted=int(d.get("hints_accepted", 0)))
+            hints_accepted=int(d.get("hints_accepted", 0)),
+            persona_stats={k: dict(v) for k, v in
+                           (d.get("persona_stats") or {}).items()},
+            raced_kills=int(d.get("raced_kills", 0)),
+            migrations_in=int(d.get("migrations_in", 0)),
+            migrations_joined=int(d.get("migrations_joined", 0)),
+            migrations_out=int(d.get("migrations_out", 0)))
         return res
 
 

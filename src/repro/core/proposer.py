@@ -43,6 +43,27 @@ class ProposalError(RuntimeError):
     ``ProposalError: ...`` string is stable for AER classification."""
 
 
+# expert personae for population search (core.population): each clones
+# the base proposer into a specialist whose move set / prompt is
+# restricted to one optimization dimension
+PERSONAE = ("tiling", "memory", "fusion", "sync")
+
+# variant-space keys each persona's stochastic tail may perturb; keys
+# absent from a case's space are ignored
+_PERSONA_KEYS = {
+    "tiling": ("block_m", "block_n", "block_k", "block_q", "block",
+               "block_cols", "chunk", "unroll"),
+    "memory": ("compute_dtype", "fuse_epilogue", "one_pass", "chunked",
+               "rank1_trick", "moment_trick", "block_m", "block_n",
+               "block_k", "block"),
+    "fusion": ("fuse_epilogue", "one_pass", "rank1_trick", "moment_trick",
+               "reshape_butterfly", "precompute_coeffs"),
+    "sync": ("chunked", "one_pass", "precompute_coeffs",
+             "vectorized_exchange", "use_native_sort", "unroll", "chunk",
+             "block_cols"),
+}
+
+
 @dataclass
 class RoundState:
     round: int
@@ -87,6 +108,26 @@ class Proposer:
             f"out-of-process executors need heuristic/direct/llm (or a "
             f"proposer that overrides to_spec)")
 
+    def with_persona(self, persona: str, idx: int = 0) -> Optional["Proposer"]:
+        """Clone this proposer as the given expert persona (population
+        search).  ``idx`` is the persona's position in the wave, used for
+        deterministic seed derivation.  None → this proposer kind has no
+        persona support and the caller falls back to the greedy loop."""
+        return None
+
+
+def persona_proposers(base: "Proposer", personae) -> Optional[List["Proposer"]]:
+    """One persona-parameterized clone of ``base`` per expert, or None
+    when the proposer kind supports no personae (e.g. DirectProposer) —
+    population search then degrades to the greedy loop."""
+    out: List[Proposer] = []
+    for i, p in enumerate(personae):
+        clone = base.with_persona(p, i)
+        if clone is None:
+            return None
+        out.append(clone)
+    return out or None
+
 
 def proposer_from_spec(spec: Dict[str, Any], *,
                        patterns: Optional[PatternStore] = None
@@ -96,11 +137,13 @@ def proposer_from_spec(spec: Dict[str, Any], *,
     if kind == "heuristic":
         return HeuristicProposer(int(spec.get("seed", 0)), patterns,
                                  spec.get("platform", "cpu"),
-                                 diagnose=bool(spec.get("diagnose", True)))
+                                 diagnose=bool(spec.get("diagnose", True)),
+                                 persona=spec.get("persona", ""))
     if kind == "direct":
         return DirectProposer()
     if kind == "llm":
-        return LLMProposer(patterns, spec.get("platform", "cpu"))
+        return LLMProposer(patterns, spec.get("platform", "cpu"),
+                           persona=spec.get("persona", ""))
     raise ValueError(f"unknown proposer kind {kind!r}")
 
 
@@ -150,7 +193,8 @@ class HeuristicProposer(Proposer):
                       "vectorized_exchange", "use_native_sort")
 
     def __init__(self, seed: int = 0, patterns: Optional[PatternStore] = None,
-                 platform: str = "cpu", *, diagnose: bool = True):
+                 platform: str = "cpu", *, diagnose: bool = True,
+                 persona: str = ""):
         self.seed = seed
         self.rng = random.Random(seed)
         self.patterns = patterns
@@ -158,10 +202,21 @@ class HeuristicProposer(Proposer):
         # False → ignore RoundState.diagnosis and use the legacy raw
         # thresholds (the undiagnosed baseline benchmarks compare against)
         self.diagnose = diagnose
+        # non-empty → expert mode: propose() emits only this persona's
+        # move set (population search fans a wave across K personae)
+        self.persona = persona
 
     def to_spec(self):
         return {"kind": self.name, "seed": self.seed,
-                "platform": self.platform, "diagnose": self.diagnose}
+                "platform": self.platform, "diagnose": self.diagnose,
+                "persona": self.persona}
+
+    def with_persona(self, persona, idx=0):
+        # arithmetic seed offset, NOT hash(): PYTHONHASHSEED varies across
+        # worker processes and would break executor conformance
+        return HeuristicProposer(self.seed + 7919 * (idx + 1), self.patterns,
+                                 self.platform, diagnose=self.diagnose,
+                                 persona=persona)
 
     # -- the "LLM" ---------------------------------------------------------
     def propose(self, case, state, n):
@@ -177,6 +232,30 @@ class HeuristicProposer(Proposer):
                 out.append(v)
 
         base = dict(state.baseline_variant)
+        diag = state.diagnosis if self.diagnose else None
+
+        # expert mode (population search): only this persona's move set
+        # plus a persona-restricted stochastic tail — the engine handles
+        # seeds/migrants and cross-persona dedup
+        if self.persona:
+            for delta in state.hints or []:
+                v = dict(base)
+                v.update({k: val for k, val in delta.items()
+                          if k in case.variant_space})
+                push(v)
+            self._persona_moves(case, base, diag, push)
+            keys = [k for k in _PERSONA_KEYS.get(self.persona, ())
+                    if k in case.variant_space] \
+                or list(case.variant_space)
+            tries = 0
+            while len(out) < n and tries < 50:
+                tries += 1
+                v = dict(base)
+                for key in keys:
+                    if self.rng.random() < 0.5:
+                        v[key] = self.rng.choice(case.variant_space[key])
+                push(v)
+            return out[:n]
 
         # 0. the canonical recipe leads round 0 (the LLM's first shot —
         # guarantees the iterative loop dominates the Direct baseline,
@@ -192,7 +271,6 @@ class HeuristicProposer(Proposer):
             push(recipe0)
 
         # 1. Performance Pattern Inheritance hints (paper §3.2)
-        diag = state.diagnosis if self.diagnose else None
         hints = state.hints
         if hints is None and self.patterns is not None:
             hints = self.patterns.suggest(
@@ -268,105 +346,145 @@ class HeuristicProposer(Proposer):
         """Diagnosis-routed move sets: each bottleneck class gets the
         levers that move its dominant term, combined into one decisive
         recipe first, then single-lever probes, then neighbor steps as
-        the tail explorer."""
-        space = case.variant_space
+        the tail explorer.  The per-route bodies double as the persona
+        move sets for population search (``_persona_moves``)."""
         route = diag.bottleneck
-
-        def aligned_choices(key):
-            return [c for c in space.get(key, ())
-                    if isinstance(c, int) and c % 128 == 0]
-
-        def combined(moves):
-            v = dict(base)
-            v.update({k: val for k, val in moves
-                      if k in space and val in space[k]})
-            if v != base:
-                push(v)
-            return v
-
         if route == "latency":
-            # serialization: restructure first, then depth levers ON TOP
-            # of the restructure (a chunk size means nothing until the
-            # kernel is chunked); unroll sweeps largest-first since more
-            # unrolling always removes serial steps, chunk sweeps in
-            # order since its optimum is interior
-            flags = {k: True for k in self._LATENCY_FLAGS
-                     if k in space and not base.get(k)}
-            if flags:
-                push(dict(base, **flags))
-            for key in ("unroll", "chunk", "block_cols"):
-                if key in space:
-                    sweep = list(space[key])
-                    if key == "unroll":
-                        sweep = sweep[::-1]
-                    for c in sweep:
-                        if c != base.get(key):
-                            push(dict(base, **flags, **{key: c}))
-            for key in flags:                # single-lever fallbacks
-                push(dict(base, **{key: True}))
+            self._moves_latency(case, base, push)
         elif route == "memory":
-            # cut HBM traffic: lower-precision storage + every
-            # traffic-restructure flag + the biggest MXU-aligned reuse
-            # tiles, as ONE candidate
-            restructure = [(k, True) for k in
-                           ("fuse_epilogue", "one_pass", "rank1_trick",
-                            "moment_trick", "chunked", "reshape_butterfly")
-                           if k in space and not base.get(k)]
-            moves = [("compute_dtype", "bf16")] + restructure
-            moves += [(key, max(al)) for key in
-                      ("block_m", "block_n", "block_k", "block_q", "block")
-                      if (al := aligned_choices(key))]
-            big = combined(moves)
-            # leave-one-out over the restructure flags: a flag that
-            # helps alone can hurt combined (e.g. one_pass vs the
-            # rank1 restructure), so probe each removal of the recipe
-            for key, _ in restructure:
-                v = dict(big)
-                v[key] = base.get(key, space[key][0])
-                if v != big:
-                    push(v)
-            # single-lever probes of the same moves
-            for key, val in moves:
-                if key in space and val in space[key] \
-                        and base.get(key) != val:
-                    push(dict(base, **{key: val}))
-            # one tile step below the combined recipe in case the
-            # traffic model prefers a mid-size tile
-            for key in ("block_m", "block_n", "block_k", "block_q", "block"):
-                cur = big.get(key)
-                if key in space and cur in space[key]:
-                    i = space[key].index(cur)
-                    if i > 0:
-                        push(dict(big, **{key: space[key][i - 1]}))
+            self._moves_memory(case, base, push)
         elif route in ("compute", "occupancy"):
-            # fill the MXU: snap every tile to 128-aligned (bf16 doubles
-            # the peak); occupancy with a VMEM-overflow cause shrinks the
-            # working set instead of just aligning it
-            shrink = route == "occupancy" and diag.vmem_fraction > 0.9
-            moves = [("compute_dtype", "bf16")]
-            for key in ("block_m", "block_n", "block_k", "block_q", "block"):
-                al = aligned_choices(key)
-                if al:
-                    moves.append((key, min(al) if shrink else
-                                  min(al, key=lambda c: (c != 128, c))))
-            combined(moves)
-            for key, val in moves:
-                if key in space and val in space[key] \
-                        and base.get(key) != val:
-                    push(dict(base, **{key: val}))
-            if "fuse_epilogue" in space and not base.get("fuse_epilogue"):
-                push(dict(base, fuse_epilogue=True))
+            self._moves_mxu(case, base, push,
+                            shrink=route == "occupancy"
+                            and diag.vmem_fraction > 0.9)
         elif route == "collective":
-            # shrink exchanged bytes / overlap: vectorized exchanges,
-            # fused single-pass structure, lower-precision payloads
-            combined([("vectorized_exchange", True), ("one_pass", True),
-                      ("compute_dtype", "bf16")])
-            for key in ("vectorized_exchange", "one_pass", "chunked"):
-                if key in space and not base.get(key):
-                    push(dict(base, **{key: True}))
+            self._moves_collective(case, base, push)
         # balanced (or anything unrecognized): neighbor probes on every
         # key, both directions — also the tail explorer for every route
-        for key, choices in space.items():
+        self._neighbor_probes(case, base, push)
+
+    def _aligned_choices(self, case, key):
+        return [c for c in case.variant_space.get(key, ())
+                if isinstance(c, int) and c % 128 == 0]
+
+    def _combined(self, case, base, push, moves):
+        space = case.variant_space
+        v = dict(base)
+        v.update({k: val for k, val in moves
+                  if k in space and val in space[k]})
+        if v != base:
+            push(v)
+        return v
+
+    def _moves_latency(self, case, base, push):
+        # serialization: restructure first, then depth levers ON TOP
+        # of the restructure (a chunk size means nothing until the
+        # kernel is chunked); unroll sweeps largest-first since more
+        # unrolling always removes serial steps, chunk sweeps in
+        # order since its optimum is interior
+        space = case.variant_space
+        flags = {k: True for k in self._LATENCY_FLAGS
+                 if k in space and not base.get(k)}
+        if flags:
+            push(dict(base, **flags))
+        for key in ("unroll", "chunk", "block_cols"):
+            if key in space:
+                sweep = list(space[key])
+                if key == "unroll":
+                    sweep = sweep[::-1]
+                for c in sweep:
+                    if c != base.get(key):
+                        push(dict(base, **flags, **{key: c}))
+        for key in flags:                # single-lever fallbacks
+            push(dict(base, **{key: True}))
+
+    def _moves_memory(self, case, base, push):
+        # cut HBM traffic: lower-precision storage + every
+        # traffic-restructure flag + the biggest MXU-aligned reuse
+        # tiles, as ONE candidate
+        space = case.variant_space
+        restructure = [(k, True) for k in
+                       ("fuse_epilogue", "one_pass", "rank1_trick",
+                        "moment_trick", "chunked", "reshape_butterfly")
+                       if k in space and not base.get(k)]
+        moves = [("compute_dtype", "bf16")] + restructure
+        moves += [(key, max(al)) for key in
+                  ("block_m", "block_n", "block_k", "block_q", "block")
+                  if (al := self._aligned_choices(case, key))]
+        big = self._combined(case, base, push, moves)
+        # leave-one-out over the restructure flags: a flag that
+        # helps alone can hurt combined (e.g. one_pass vs the
+        # rank1 restructure), so probe each removal of the recipe
+        for key, _ in restructure:
+            v = dict(big)
+            v[key] = base.get(key, space[key][0])
+            if v != big:
+                push(v)
+        # single-lever probes of the same moves
+        for key, val in moves:
+            if key in space and val in space[key] \
+                    and base.get(key) != val:
+                push(dict(base, **{key: val}))
+        # one tile step below the combined recipe in case the
+        # traffic model prefers a mid-size tile
+        for key in ("block_m", "block_n", "block_k", "block_q", "block"):
+            cur = big.get(key)
+            if key in space and cur in space[key]:
+                i = space[key].index(cur)
+                if i > 0:
+                    push(dict(big, **{key: space[key][i - 1]}))
+
+    def _moves_mxu(self, case, base, push, *, shrink=False):
+        # fill the MXU: snap every tile to 128-aligned (bf16 doubles
+        # the peak); occupancy with a VMEM-overflow cause shrinks the
+        # working set instead of just aligning it
+        space = case.variant_space
+        moves = [("compute_dtype", "bf16")]
+        for key in ("block_m", "block_n", "block_k", "block_q", "block"):
+            al = self._aligned_choices(case, key)
+            if al:
+                moves.append((key, min(al) if shrink else
+                              min(al, key=lambda c: (c != 128, c))))
+        self._combined(case, base, push, moves)
+        for key, val in moves:
+            if key in space and val in space[key] \
+                    and base.get(key) != val:
+                push(dict(base, **{key: val}))
+        if "fuse_epilogue" in space and not base.get("fuse_epilogue"):
+            push(dict(base, fuse_epilogue=True))
+
+    def _moves_collective(self, case, base, push):
+        # shrink exchanged bytes / overlap: vectorized exchanges,
+        # fused single-pass structure, lower-precision payloads
+        space = case.variant_space
+        self._combined(case, base, push,
+                       [("vectorized_exchange", True), ("one_pass", True),
+                        ("compute_dtype", "bf16")])
+        for key in ("vectorized_exchange", "one_pass", "chunked"):
+            if key in space and not base.get(key):
+                push(dict(base, **{key: True}))
+
+    def _moves_fusion(self, case, base, push):
+        # restructure levers only: all-on recipe, leave-one-out probes
+        # (interacting flags — one_pass vs rank1_trick), then singles
+        space = case.variant_space
+        flags = [k for k in ("fuse_epilogue", "one_pass", "rank1_trick",
+                             "moment_trick", "reshape_butterfly",
+                             "precompute_coeffs")
+                 if k in space and not base.get(k)]
+        if not flags:
+            return
+        push(dict(base, **{k: True for k in flags}))
+        if len(flags) > 1:
+            for drop in flags:
+                push(dict(base, **{k: True for k in flags if k != drop}))
+        for k in flags:
+            push(dict(base, **{k: True}))
+
+    def _neighbor_probes(self, case, base, push, keys=None):
+        for key, choices in case.variant_space.items():
+            if keys is not None and key not in keys:
+                continue
             cur = base.get(key)
             if cur not in choices:
                 continue
@@ -374,6 +492,34 @@ class HeuristicProposer(Proposer):
             for j in (idx + 1, idx - 1):
                 if 0 <= j < len(choices):
                     push(dict(base, **{key: choices[j]}))
+
+    def _persona_moves(self, case, base, diag, push):
+        """One expert's move set (population search).  Reuses the routed
+        bodies: the persona decides WHICH levers, the diagnosis only
+        refines HOW (e.g. occupancy shrinks tiles instead of growing)."""
+        p = self.persona
+        if p == "tiling":
+            self._moves_mxu(case, base, push,
+                            shrink=diag is not None
+                            and diag.bottleneck == "occupancy"
+                            and diag.vmem_fraction > 0.9)
+            # exhaustive largest-first tile sweeps beyond the 128 snap
+            space = case.variant_space
+            for key in ("block_m", "block_n", "block_k", "block_q",
+                        "block", "block_cols", "chunk"):
+                if key in space:
+                    for c in list(space[key])[::-1]:
+                        if c != base.get(key):
+                            push(dict(base, **{key: c}))
+        elif p == "memory":
+            self._moves_memory(case, base, push)
+        elif p == "fusion":
+            self._moves_fusion(case, base, push)
+        elif p == "sync":
+            self._moves_latency(case, base, push)
+            self._moves_collective(case, base, push)
+        self._neighbor_probes(case, base, push,
+                              keys=_PERSONA_KEYS.get(p))
 
 
 class DirectProposer(Proposer):
@@ -546,9 +692,26 @@ Prior effective patterns: {hints}.
 Recent errors: {errors}.
 Reply with a JSON list of up to {n} variant dicts drawn from the space."""
 
+    # persona preambles for population search: the same round prompt,
+    # but the model is told which expert it is and which levers are its
+    PERSONA_PROMPTS = {
+        "tiling": ("As the TILING expert, restrict yourself to block/"
+                   "tile/grid-shape knobs (block_m/n/k/q, block, chunk, "
+                   "unroll): MXU alignment and VMEM fit.\n"),
+        "memory": ("As the MEMORY-LAYOUT expert, cut HBM traffic: "
+                   "storage dtype, reuse-tile sizes, and traffic-"
+                   "restructuring flags.\n"),
+        "fusion": ("As the FUSION/RESTRUCTURE expert, fuse epilogues and "
+                   "restructure passes (one_pass, rank1/moment tricks, "
+                   "precomputation).\n"),
+        "sync": ("As the SYNCHRONIZATION/LATENCY expert, remove serial "
+                 "steps: chunked scans, unrolling, vectorized exchanges, "
+                 "native sorts.\n"),
+    }
+
     def __init__(self, patterns: Optional[PatternStore] = None,
                  platform: str = "cpu", timeout_s: float = 60.0,
-                 batcher: Optional[LLMBatcher] = None):
+                 batcher: Optional[LLMBatcher] = None, persona: str = ""):
         self.endpoint = os.environ.get("REPRO_LLM_ENDPOINT")
         self.model = os.environ.get("REPRO_LLM_MODEL", "o3")
         self.api_key = os.environ.get("REPRO_LLM_API_KEY", "")
@@ -558,9 +721,17 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
         # attached by the campaign executor so concurrent cases' round
         # prompts coalesce into one endpoint call
         self.batcher = batcher
+        self.persona = persona
 
     def to_spec(self):
-        return {"kind": self.name, "platform": self.platform}
+        return {"kind": self.name, "platform": self.platform,
+                "persona": self.persona}
+
+    def with_persona(self, persona, idx=0):
+        # clones share self.batcher, so one generation wave of K persona
+        # prompts coalesces into a single endpoint call
+        return LLMProposer(self.patterns, self.platform, self.timeout_s,
+                           batcher=self.batcher, persona=persona)
 
     def _chat(self, prompt: str) -> str:
         return chat_completion(prompt, endpoint=self.endpoint,
@@ -580,12 +751,13 @@ Reply with a JSON list of up to {n} variant dicts drawn from the space."""
                 case, self.platform,
                 bottleneck=diag.bottleneck if diag else "")
                 if self.patterns else [])
-        prompt = self.PROMPT.format(
-            name=case.name, family=case.family,
-            variant=state.baseline_variant, space=case.variant_space,
-            feedback=state.feedback,
-            diagnosis=diag.summary() if diag else "n/a",
-            hints=hints, errors=state.errors[-3:], n=n)
+        prompt = self.PERSONA_PROMPTS.get(self.persona, "") + \
+            self.PROMPT.format(
+                name=case.name, family=case.family,
+                variant=state.baseline_variant, space=case.variant_space,
+                feedback=state.feedback,
+                diagnosis=diag.summary() if diag else "n/a",
+                hints=hints, errors=state.errors[-3:], n=n)
         text = self._round_text(prompt)
         cands = _json_span(text, "[", "]", what="variant list")
         if not isinstance(cands, list):

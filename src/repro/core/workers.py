@@ -63,9 +63,11 @@ from repro.core.measure import (MeasureConfig, default_lease_path,
 from repro.core.mep import MEP, MEPConstraints, build_mep
 from repro.core.optimizer import Evaluator, OptConfig, OptResult, RoundLog
 from repro.core.patterns import Pattern, PatternStore
+from repro.core.population import Population, PopulationConfig
 from repro.core.profiler import Platform, platform_from_name
 from repro.core.proposer import (LLMBatcher, LLMProposer, Proposer,
-                                 RoundState, proposer_from_spec)
+                                 RoundState, persona_proposers,
+                                 proposer_from_spec)
 
 
 @dataclass
@@ -99,6 +101,9 @@ class WorkerContext:
     # worker timing this campaign's wall-clock sections
     measure: Optional[MeasureConfig] = None
     lease_path: Optional[str] = None
+    # campaign-level default population-search policy (per-job
+    # cfg.population wins); None → the greedy §3.2 loop
+    population: Optional[PopulationConfig] = None
 
 
 # ---------------------------------------------------------------------------
@@ -115,13 +120,21 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                  mep: Optional[MEP] = None,
                  scale: Optional[int] = None,
                  measure: Optional[MeasureConfig] = None,
-                 lease_path: Optional[str] = None) -> OptResult:
+                 lease_path: Optional[str] = None,
+                 population: Optional[PopulationConfig] = None
+                 ) -> OptResult:
     """Round loop (eq. 5): propose → evaluate (build→FE→time, AER-wrapped,
     cache-served) → argmin, with the uniform early stop.  Serial per
     case; concurrency happens across cases, in whichever executor —
     measured platforms included, because wall-clock sections serialize
     on the campaign's timing lease (``lease_path``), not on worker
-    exclusivity."""
+    exclusivity.
+
+    With a ``PopulationConfig`` active (per-job ``cfg.population`` wins
+    over the campaign-level ``population``) and a persona-capable
+    proposer, the greedy loop is replaced by the evolutionary engine in
+    ``repro.core.population`` — expert persona waves, tournament-by-
+    racing selection, island migration through the PatternStore."""
     t_start = time.time()
     case, proposer, cfg = job.case, job.proposer, job.cfg
     # measurement policy: per-job cfg wins over the campaign default;
@@ -150,6 +163,69 @@ def run_case_job(job: CaseJob, platform: Platform, *,
 
     history: List[Dict[str, Any]] = []
     errors: List[str] = []
+    best_ci_rel = 0.0           # rel. CI of the timing behind best_t
+    last_bottleneck = ""
+    pcfg = cfg.population if cfg.population is not None else population
+    clones = persona_proposers(proposer, pcfg.personae) \
+        if pcfg is not None else None
+    if clones:
+        # population search: expert persona waves + tournament racing +
+        # island migration (core.population).  A proposer kind without
+        # persona support (e.g. DirectProposer) falls through to the
+        # greedy loop below.
+        engine = Population(case, platform, mep, evaluator, cfg, pcfg,
+                            clones, patterns=patterns, db=db,
+                            campaign_id=campaign_id, job_name=job.name,
+                            seed=job.seed, verbose=verbose)
+        last_bottleneck = engine.search(res, baseline_v, t_base,
+                                        stop_event=stop_event)
+        best_v, best_t = res.best_variant, res.best_time_s
+    else:
+        last_bottleneck = _greedy_rounds(
+            job, platform, res, evaluator, mep, baseline_v, t_base,
+            campaign_id=campaign_id, patterns=patterns, db=db,
+            stop_event=stop_event, history=history, errors=errors)
+        best_v, best_t = res.best_variant, res.best_time_s
+    if not res.stop_reason:
+        res.stop_reason = f"d_rounds={cfg.d_rounds} exhausted"
+
+    res.aer_records = len(aer.records)
+    res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
+    res.timing_reps = evaluator.timing_reps
+    res.timing_reps_fixed = evaluator.timing_reps_fixed
+    res.raced_out = evaluator.raced
+    if evaluator.timing_reps and \
+            evaluator.timing_reps < evaluator.timing_reps_fixed:
+        res.mep_log.append(
+            f"measurement: {evaluator.timing_reps} reps paid vs "
+            f"{evaluator.timing_reps_fixed} fixed-R "
+            f"({res.rep_savings:.2f}x savings, "
+            f"{evaluator.raced} raced out)")
+    res.wall_s = time.time() - t_start
+    if patterns is not None:
+        patterns.record(case, platform.name, baseline_v, best_v,
+                        res.speedup, bottleneck=last_bottleneck)
+    if db:
+        db.append("case_result", campaign=campaign_id,
+                  job=job.name, **res.to_dict())
+    if verbose:
+        print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
+              f"{res.speedup:.2f}x over baseline, "
+              f"{len(res.rounds)} rounds, {res.cache_hits} cache hits "
+              f"[{res.stop_reason}]", flush=True)
+    return res
+
+
+def _greedy_rounds(job: CaseJob, platform: Platform, res: OptResult,
+                   evaluator: Evaluator, mep: MEP, baseline_v, t_base, *,
+                   campaign_id: str, patterns, db, stop_event,
+                   history: List[Dict[str, Any]], errors: List[str]
+                   ) -> str:
+    """The paper's greedy one-variant-per-round loop (the pre-population
+    baseline, still the default).  Fills ``res`` rounds/best/stop_reason
+    and returns the last diagnosed bottleneck."""
+    case, proposer, cfg = job.case, job.proposer, job.cfg
+    best_v, best_t = dict(baseline_v), t_base
     best_ci_rel = 0.0           # rel. CI of the timing behind best_t
     last_bottleneck = ""
     for d in range(cfg.d_rounds):
@@ -269,35 +345,8 @@ def run_case_job(job: CaseJob, platform: Platform, *,
             res.mep_log.append(f"round {d}: stopped ({stop})")
             res.stop_reason = stop
             break
-    if not res.stop_reason:
-        res.stop_reason = f"d_rounds={cfg.d_rounds} exhausted"
-
     res.best_variant, res.best_time_s = best_v, best_t
-    res.aer_records = len(aer.records)
-    res.cache_hits, res.cache_misses = evaluator.hits, evaluator.misses
-    res.timing_reps = evaluator.timing_reps
-    res.timing_reps_fixed = evaluator.timing_reps_fixed
-    res.raced_out = evaluator.raced
-    if evaluator.timing_reps and \
-            evaluator.timing_reps < evaluator.timing_reps_fixed:
-        res.mep_log.append(
-            f"measurement: {evaluator.timing_reps} reps paid vs "
-            f"{evaluator.timing_reps_fixed} fixed-R "
-            f"({res.rep_savings:.2f}x savings, "
-            f"{evaluator.raced} raced out)")
-    res.wall_s = time.time() - t_start
-    if patterns is not None:
-        patterns.record(case, platform.name, baseline_v, best_v,
-                        res.speedup, bottleneck=last_bottleneck)
-    if db:
-        db.append("case_result", campaign=campaign_id,
-                  job=job.name, **res.to_dict())
-    if verbose:
-        print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
-              f"{res.speedup:.2f}x over baseline, "
-              f"{len(res.rounds)} rounds, {res.cache_hits} cache hits "
-              f"[{res.stop_reason}]", flush=True)
-    return res
+    return last_bottleneck
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +395,8 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
         if ctx.patterns is not None and ctx.patterns.path else None,
         "db": ctx.db.path if ctx.db else None,
         "measure": ctx.measure.to_dict() if ctx.measure else None,
+        "population": ctx.population.to_dict()
+        if ctx.population else None,
         "lease": lease,
         "campaign": campaign_id,
         "verbose": ctx.verbose,
@@ -416,15 +467,27 @@ class InProcessExecutor(Executor):
                                          ctx.lease_path))
             return self._meps[key]
 
-    def _attach_batcher(self, jobs: List[CaseJob]) -> Optional[LLMBatcher]:
+    def _attach_batcher(self, jobs: List[CaseJob],
+                        ctx: Optional[WorkerContext] = None
+                        ) -> Optional[LLMBatcher]:
         """Coalesce LLM round prompts across the campaign's concurrent
-        cases: all LLM proposers without their own batcher share one."""
-        props = [j.proposer for j in jobs
-                 if isinstance(j.proposer, LLMProposer)
-                 and j.proposer.batcher is None]
+        cases: all LLM proposers without their own batcher share one.
+        Population jobs contribute one prompt per persona per wave, so
+        ``max_batch`` is sized to the sum of the jobs' wave widths."""
+        if ctx is None:      # run() stashes it; tests wrap 1-arg
+            ctx = getattr(self, "_batch_ctx", None)
+        props, width = [], 0
+        for j in jobs:
+            if not (isinstance(j.proposer, LLMProposer)
+                    and j.proposer.batcher is None):
+                continue
+            props.append(j.proposer)
+            pcfg = j.cfg.population if j.cfg.population is not None \
+                else (ctx.population if ctx is not None else None)
+            width += len(pcfg.personae) if pcfg is not None else 1
         if len(props) < 2 or self.max_workers < 2:
             return None
-        batcher = LLMBatcher(max_batch=len(props))
+        batcher = LLMBatcher(max_batch=max(width, len(props)))
         for p in props:
             p.batcher = batcher
             batcher.register()
@@ -432,6 +495,7 @@ class InProcessExecutor(Executor):
 
     def run(self, jobs, ctx, *, campaign_id="", stop=None):
         from concurrent.futures import ThreadPoolExecutor
+        self._batch_ctx = ctx
         batcher = self._attach_batcher(jobs)
 
         def guarded(job: CaseJob):
@@ -441,7 +505,8 @@ class InProcessExecutor(Executor):
                     job, ctx.platform, campaign_id=campaign_id,
                     cache=ctx.cache, patterns=ctx.patterns, db=ctx.db,
                     stop_event=stop, verbose=ctx.verbose, mep=mep,
-                    measure=ctx.measure, lease_path=ctx.lease_path)
+                    measure=ctx.measure, lease_path=ctx.lease_path,
+                    population=ctx.population)
             except Exception as e:  # noqa: BLE001 — isolate job failures
                 return e
             finally:
@@ -859,12 +924,15 @@ def worker_main() -> int:
                 stop_event.set()
             measure = MeasureConfig.from_dict(spec["measure"]) \
                 if spec.get("measure") else None
+            pop_cfg = PopulationConfig.from_dict(spec["population"]) \
+                if spec.get("population") else None
             res = run_case_job(
                 job, platform, campaign_id=spec.get("campaign", ""),
                 cache=cache, patterns=patterns, db=db,
                 stop_event=stop_event,
                 verbose=spec.get("verbose", False), scale=scale,
-                measure=measure, lease_path=spec.get("lease"))
+                measure=measure, lease_path=spec.get("lease"),
+                population=pop_cfg)
             reply = {"ok": True, "result": res.to_dict(full=True)}
         except Exception as e:  # noqa: BLE001 — job errors go to scheduler
             import traceback
