@@ -1,5 +1,6 @@
 .PHONY: verify test-fast test-workers test-conformance test-measure \
-	test-serve test-kernels test-population bench bench-full bench-serve
+	test-serve test-kernels test-population test-fleet bench bench-full \
+	bench-serve
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -53,6 +54,14 @@ test-kernels:
 test-population:
 	REPRO_CAMPAIGN_WORKERS=2 PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_population.py
+
+# Networked campaign fleet: RemoteExecutor over the spec wire, per-host
+# lease/namespace resolution, journal replication, and the loopback
+# 2-host e2e legs — spawn transport only, no real SSH (the CI
+# test-fleet job)
+test-fleet:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_fleet.py
 
 # Old-vs-new serving benchmark (table 9) on the reduced LM
 bench-serve:

@@ -1,0 +1,187 @@
+"""Table 12 — the networked campaign fleet demonstration (not a paper
+table).
+
+One campaign across N simulated hosts, three claims, all on analytic
+(TPU-model) cases so every number is deterministic:
+
+1. **Equivalence** — a 2-"host" fleet campaign (``RemoteExecutor`` over
+   loopback sockets, each worker server under its own
+   ``REPRO_HOST_ALIAS``) produces winner records identical to the
+   single-host ``SubprocessExecutor`` run: the spec wire form, the
+   per-host lease/namespace resolution, and the affinity router change
+   *where* evaluations run, never *what* they decide.
+2. **Provenance & isolation** — every ``case_result`` / ``round``
+   record journals the fleet host that produced it, and the shared
+   eval-cache file ends up holding records namespaced per host — the
+   measured-replay firewall (host A's wall-clock timings never replay
+   on host B) demonstrated at the namespace level.
+3. **Replication** — hosts that do NOT share the scheduler's filesystem
+   (per-host ``cache_path`` / ``db_path`` remaps) converge through the
+   ``repro.core.replicate`` tail-ship loop: winners still identical,
+   and every host journal line is home in the scheduler's journals by
+   campaign end.
+
+Output JSON (aggregate ``--out`` and, standalone,
+``results/table12_fleet.json``) carries the three verdicts, the
+per-host work split, and the wall-clocks.
+
+    PYTHONPATH=src python -m benchmarks.run --tables 12
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+from benchmarks.common import ensure_ctx
+from benchmarks.table6_workers import WINNER_FIELDS, winner_records
+from repro.core import (Campaign, CaseJob, EvalCache, FleetHost,
+                        HeuristicProposer, MEPConstraints, OptConfig,
+                        RemoteExecutor, ResultsDB, SubprocessExecutor,
+                        TPUModelPlatform, get_case)
+
+CASES = ["2mm", "3mm", "atax", "bicg", "gemm", "gemver", "gesummv",
+         "syr2k"]
+CFG = OptConfig(d_rounds=4, n_candidates=3, r=5, k=1)
+CONS = MEPConstraints(r=5, k=1, t_max_s=2.0)
+SEED = 0
+FLEET = ("fleetA", "fleetB")
+
+
+def _jobs() -> List[CaseJob]:
+    # fresh seeded proposers per leg: equivalence rests on every leg
+    # seeing the identical RNG stream (and no shared PatternStore)
+    return [CaseJob(get_case(name), HeuristicProposer(SEED),
+                    cfg=CFG, constraints=CONS, seed=SEED)
+            for name in CASES]
+
+
+def _hosts_seen(db: ResultsDB) -> Dict[str, int]:
+    seen: Dict[str, int] = {}
+    for r in db.records("case_result"):
+        h = r.get("host") or "?"
+        seen[h] = seen.get(h, 0) + 1
+    return seen
+
+
+def _cache_namespaces(cache_path: str) -> List[str]:
+    out = set()
+    try:
+        with open(cache_path) as f:
+            for ln in f:
+                if ln.strip():
+                    out.add(json.loads(ln).get("ns", ""))
+    except OSError:
+        pass
+    return sorted(out)
+
+
+def _run(tag: str, executor, cache_path: str, db_path: str) -> Dict:
+    cache = EvalCache(cache_path)
+    db = ResultsDB(db_path)
+    camp = Campaign(TPUModelPlatform(), cache=cache, db=db,
+                    executor=executor)
+    executor.warm()       # spawn + jax import outside the timed region
+    t0 = time.time()
+    results = camp.run(_jobs())
+    wall = time.time() - t0
+    print(f"#   {tag}: {wall:.1f}s wall, "
+          f"{sum(len(r.rounds) for r in results)} rounds total", flush=True)
+    try:
+        return {"wall_s": round(wall, 2), "db": db, "cache": cache,
+                "speedups": {r.case_name: round(r.speedup, 4)
+                             for r in results}}
+    finally:
+        executor.close()
+
+
+def main(ctx=None) -> Dict:
+    ctx = ensure_ctx(ctx)
+    tmp = tempfile.mkdtemp(prefix="fleet_demo_")
+    print(f"# fleet demo: {len(CASES)} analytic cases across "
+          f"{len(FLEET)} simulated hosts (loopback spawn transport)",
+          flush=True)
+
+    # leg A: the single-host reference — SubprocessExecutor, cold cache
+    ref = _run("single-host subprocess workers=2", SubprocessExecutor(2),
+               os.path.join(tmp, "cache_a.jsonl"),
+               os.path.join(tmp, "db_a.jsonl"))
+    # leg B: the fleet on a shared filesystem — 2 loopback worker
+    # servers, each its own host identity, one shared cache/db file
+    fleet = _run(
+        "fleet 2 hosts (shared filesystem)",
+        RemoteExecutor([{"name": h} for h in FLEET]),
+        os.path.join(tmp, "cache_b.jsonl"),
+        os.path.join(tmp, "db_b.jsonl"))
+    # leg C: the fleet WITHOUT a shared filesystem — per-host journal
+    # remaps, converged by the tail-ship replication loop
+    rep_hosts = [FleetHost(name=f"rep{h[-1].upper()}",
+                           cache_path=os.path.join(tmp, f"{h}_cache.jsonl"),
+                           db_path=os.path.join(tmp, f"{h}_db.jsonl"))
+                 for h in FLEET]
+    repl = _run("fleet 2 hosts (replicated journals)",
+                RemoteExecutor(rep_hosts),
+                os.path.join(tmp, "cache_c.jsonl"),
+                os.path.join(tmp, "db_c.jsonl"))
+
+    ref_w = winner_records(ref["db"])
+    identical_fleet = winner_records(fleet["db"]) == ref_w
+    identical_repl = winner_records(repl["db"]) == ref_w
+    fleet_hosts = _hosts_seen(fleet["db"])
+    repl_hosts = _hosts_seen(repl["db"])
+    fleet_ns = _cache_namespaces(os.path.join(tmp, "cache_b.jsonl"))
+    per_host_ns = all(any(h in ns for ns in fleet_ns) for h in FLEET)
+    # replication verdict: every host journal's cache keys made it home
+    sched_keys = {json.loads(ln)["key"]
+                  for ln in open(os.path.join(tmp, "cache_c.jsonl"))
+                  if ln.strip()}
+    shipped_home = all(
+        {json.loads(ln)["key"] for ln in open(h.cache_path)
+         if ln.strip()} <= sched_keys
+        for h in rep_hosts)
+
+    rec = {
+        "table": "table12_fleet",
+        "cases": CASES,
+        "fleet": list(FLEET),
+        "winner_fields": list(WINNER_FIELDS),
+        "wall_s_single_host": ref["wall_s"],
+        "wall_s_fleet_shared_fs": fleet["wall_s"],
+        "wall_s_fleet_replicated": repl["wall_s"],
+        "winners_identical_fleet": identical_fleet,
+        "winners_identical_replicated": identical_repl,
+        "hosts_seen_fleet": fleet_hosts,
+        "hosts_seen_replicated": repl_hosts,
+        "all_hosts_worked": sorted(fleet_hosts) == sorted(FLEET),
+        "cache_namespaces_fleet": fleet_ns,
+        "per_host_namespaces": per_host_ns,
+        "replication_shipped_home": shipped_home,
+        "case_speedups": ref["speedups"],
+    }
+    print(f"# table12_fleet: winners identical: fleet={identical_fleet} "
+          f"replicated={identical_repl}; hosts {fleet_hosts}; "
+          f"per-host namespaces={per_host_ns}; "
+          f"replication home={shipped_home}", flush=True)
+    for leg in (ref, fleet, repl):
+        leg.pop("db", None)
+        leg.pop("cache", None)
+    rec["legs"] = {"single_host": ref, "fleet_shared_fs": fleet,
+                   "fleet_replicated": repl}
+    out = os.path.join("results", "table12_fleet.json")
+    try:
+        os.makedirs("results", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"# wrote {out}", flush=True)
+    except OSError:
+        pass
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    main()

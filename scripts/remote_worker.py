@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Fleet worker server: the campaign eval-spec protocol over TCP.
+
+This is the network face of the worker fabric.  It serves the exact
+line-JSON protocol ``scripts/worker_main.py`` speaks over stdio — one
+spec in, one ``OptResult`` wire dict out — on a TCP socket instead, so
+a ``RemoteExecutor`` on another machine can stream jobs to this host.
+Each accepted connection is one worker *slot*, served in its own thread
+against a process-shared ``_SpecServer`` (warm platform/jit/cache
+handles are reused across slots and campaigns).
+
+Startup prints ``READY <port>`` on stdout (port 0 binds an ephemeral
+port — how the spawn transport's simulated fleet finds it); everything
+else goes to stderr.  ``--alias`` sets ``REPRO_HOST_ALIAS``, giving the
+server a fleet-wide host identity: the measured-cache namespace, the
+timing-lease scope, and all journal ``host`` provenance key on it, so N
+loopback servers on one machine behave exactly like N distinct hosts.
+
+Run on a fleet machine (then point a ``FleetHost(transport="socket",
+address="thathost:7077")`` at it):
+
+    PYTHONPATH=src python scripts/remote_worker.py --bind 0.0.0.0 \
+        --port 7077
+
+Security note: the protocol is unauthenticated — bind to loopback (the
+default) or a trusted network only, or use the ssh transport instead.
+"""
+import argparse
+import json
+import os
+import socket
+import sys
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def serve_connection(conn: socket.socket, state) -> None:
+    """One slot: read spec lines, answer reply lines, until the peer
+    hangs up.  The byte buffer decodes only complete lines, so UTF-8
+    sequences split across TCP segments are never torn."""
+    from repro.core.evalcache import json_safe
+    buf = b""
+    try:
+        while True:
+            chunk = conn.recv(65536)
+            if not chunk:
+                return
+            buf += chunk
+            while True:
+                nl = buf.find(b"\n")
+                if nl < 0:
+                    break
+                line, buf = buf[:nl], buf[nl + 1:]
+                if not line.strip():
+                    continue
+                try:
+                    spec = json.loads(line.decode("utf-8",
+                                                  errors="replace"))
+                except ValueError as e:
+                    reply = {"ok": False, "type": "ProtocolError",
+                             "error": f"{e}"[:500]}
+                else:
+                    reply = state.handle(spec)
+                conn.sendall((json.dumps(json_safe(reply), default=str)
+                              + "\n").encode())
+    except OSError:
+        pass                      # peer reset: the slot is simply gone
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="campaign fleet worker server (eval-spec protocol "
+                    "over TCP)")
+    ap.add_argument("--bind", default="127.0.0.1",
+                    help="address to listen on (default loopback; the "
+                         "protocol is unauthenticated)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP port (0 = ephemeral, printed as READY)")
+    ap.add_argument("--alias", default="",
+                    help="fleet host identity (sets REPRO_HOST_ALIAS: "
+                         "namespaces, lease scope, journal provenance)")
+    args = ap.parse_args(argv)
+    if args.alias:
+        os.environ["REPRO_HOST_ALIAS"] = args.alias
+
+    # import AFTER the alias is set: module state derived from host
+    # identity (default namespaces) must see it
+    from repro.core.evalcache import this_host
+    from repro.core.workers import _SpecServer
+
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((args.bind, args.port))
+    srv.listen(64)
+    port = srv.getsockname()[1]
+    print(f"READY {port}", flush=True)
+    print(f"# fleet worker {this_host()} serving on {args.bind}:{port}",
+          file=sys.stderr, flush=True)
+
+    state = _SpecServer()
+    while True:
+        try:
+            conn, peer = srv.accept()
+        except OSError:
+            return 0              # listening socket closed: shut down
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        threading.Thread(target=serve_connection, args=(conn, state),
+                         name=f"slot-{peer[0]}:{peer[1]}",
+                         daemon=True).start()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,12 +25,14 @@ from repro.core.population import (Individual, Population,
                                    PopulationConfig)
 from repro.core.evalcache import (EvalCache, EvalRecord, ResultsDB,
                                   canonical_spec, default_namespace,
-                                  spec_key)
+                                  spec_key, this_host)
 from repro.core.optimizer import (CandidateLog, Evaluator, OptConfig,
                                   OptResult, RoundLog, optimize)
-from repro.core.workers import (CaseJob, Executor, InProcessExecutor,
-                                LocalClusterExecutor, SubprocessExecutor,
+from repro.core.workers import (CaseJob, Executor, FleetHost,
+                                InProcessExecutor, LocalClusterExecutor,
+                                RemoteExecutor, SubprocessExecutor,
                                 WorkerContext, make_executor, run_case_job)
+from repro.core.replicate import JournalLink, Replicator
 from repro.core.campaign import Campaign
 from repro.core import integrate
 from repro.core import extraction

@@ -115,11 +115,17 @@ class Campaign:
         # campaign this scheduler process creates (e.g. the autotuner's
         # repeated cycles) shares ONE lease file and ONE registry entry
         # — timing contends for the same CPUs whichever campaign owns it
+        # lease_scope records the derivation coordinates when WE derived
+        # the path (vs caller-pinned): the spec wire form ships them so
+        # fleet workers on other hosts re-resolve the lease against
+        # their own hostname — a lease arbitrates one machine's CPUs
+        self.lease_scope = None
         if lease_path is None and not getattr(platform,
                                               "concurrency_safe", False):
-            lease_path = default_lease_path(
-                cache.path if cache is not None else None,
-                scope=str(os.getpid()))
+            cache_path = cache.path if cache is not None else None
+            scope = str(os.getpid())
+            lease_path = default_lease_path(cache_path, scope=scope)
+            self.lease_scope = {"cache": cache_path, "scope": scope}
         self.lease_path = lease_path
         self.verbose = verbose
         if max_workers is None:
@@ -165,6 +171,7 @@ class Campaign:
                             patterns=self.patterns, db=self.db,
                             verbose=self.verbose, measure=self.measure,
                             lease_path=self.lease_path,
+                            lease_scope=self.lease_scope,
                             population=self.population)
         outcomes = self.executor.run(jobs, ctx, campaign_id=campaign_id,
                                      stop=stop)

@@ -57,12 +57,21 @@ except ImportError:       # pragma: no cover - non-POSIX hosts
 from repro.core.kernelcase import Variant
 
 
+def this_host() -> str:
+    """The host identity every per-host resolution rule keys on: the
+    measured-cache namespace, the timing-lease host scope, and the
+    journals' host provenance.  ``REPRO_HOST_ALIAS`` overrides the real
+    hostname so a simulated fleet (N worker servers on one machine,
+    loopback sockets) exercises the exact cross-host code paths."""
+    return os.environ.get("REPRO_HOST_ALIAS") or socket.gethostname()
+
+
 def default_namespace() -> str:
     """Identity of the measurement conditions: hostname + platform
     fingerprint.  Wall-clock timings taken under a different namespace
     are not comparable and must not replay from the shared cache."""
     import platform as _pyplat
-    return (f"{socket.gethostname()}:{_pyplat.machine()}"
+    return (f"{this_host()}:{_pyplat.machine()}"
             f":py{_pyplat.python_version()}:cpus={os.cpu_count()}")
 
 
@@ -197,6 +206,12 @@ class EvalCache:
                  namespace: Optional[str] = None,
                  ttl_s: Optional[float] = None):
         self.path = path
+        # ns_explicit distinguishes a caller-pinned namespace (shipped
+        # verbatim over the spec wire) from the host-derived default —
+        # a worker on ANOTHER host must re-derive the default locally,
+        # or its measured records would be stamped with the scheduler's
+        # host and wrongly replay there (see workers.job_to_spec)
+        self.ns_explicit = namespace is not None
         self.namespace = namespace if namespace is not None \
             else default_namespace()
         if ttl_s is None:

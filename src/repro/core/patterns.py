@@ -134,6 +134,11 @@ class PatternStore:
     def __init__(self, path: Optional[str] = None, *,
                  namespace: Optional[str] = None):
         self.path = path
+        # like EvalCache: a host-derived default namespace must be
+        # re-derived by workers on other hosts (the wire form ships
+        # None), so pattern provenance names the host that actually
+        # recorded the win — patterns still cross namespaces freely
+        self.ns_explicit = namespace is not None
         self.namespace = namespace if namespace is not None \
             else default_namespace()
         self._lock = threading.Lock()
@@ -160,7 +165,8 @@ class PatternStore:
                 "subprocess executors need a file-backed PatternStore "
                 "(or none): an in-memory store cannot be shared across "
                 "processes")
-        return {"path": self.path, "ns": self.namespace}
+        return {"path": self.path,
+                "ns": self.namespace if self.ns_explicit else None}
 
     @staticmethod
     def from_spec(spec: Dict[str, Any]) -> "PatternStore":

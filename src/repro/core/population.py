@@ -468,9 +468,11 @@ class Population:
         acceptance gate reads these back from the journal file."""
         if not self.db:
             return
+        from repro.core.evalcache import this_host
         self.db.append(
             "round", campaign=self.campaign_id, job=self.job_name,
             case=self.case.name, round=g, worker=os.getpid(),
+            host=this_host(),
             baseline_time_s=rl.baseline_time_s,
             best_time_s=rl.best_time_s, improved=rl.improved,
             stop_reason=stop, diagnosis=rl.diagnosis,

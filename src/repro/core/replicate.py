@@ -1,0 +1,154 @@
+"""Thin append-replication for the fleet's shared JSONL journals.
+
+Every store the campaign fleet shares — the ``EvalCache`` file, the
+``PatternStore`` journal, the ``ResultsDB`` manifest — has the same
+shape: O_APPEND JSONL where each line is a self-contained record and
+readers **merge on replay** (duplicate lines are idempotent, order
+across writers does not matter, a torn trailing line is skipped until
+its newline lands).  Those semantics make cross-host sharing trivial
+when there is no shared filesystem: replication is *tail-ship + replay*
+— read the complete lines appended to one journal since the last sweep
+and append them verbatim to the other, where the store's normal
+tail-reload folds them in.
+
+The only hazard is the echo: a line shipped A→B reappears in B's tail
+and would bounce back to A (and onward, forever).  A ``JournalLink``
+therefore remembers the digest of every line it has shipped *in either
+direction* and never ships it twice.  A side effect worth knowing: a
+byte-identical line appended independently on both sides crosses the
+link only once — harmless, because identical journal lines carry
+identical information under merge-on-replay.
+
+``RemoteExecutor`` drives this for fleet hosts configured with journal
+path remaps; it is equally usable standalone (e.g. a cron rsync-less
+mirror of a campaign's results journal).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+
+class _Tail:
+    """Incremental reader of complete lines from a JSONL journal.  A
+    final line without its newline is a write still in flight — left
+    for the next sweep, exactly like the stores' own tail-reload."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.offset = 0
+
+    def lines(self) -> List[bytes]:
+        if not os.path.exists(self.path):
+            return []
+        with open(self.path, "rb") as f:
+            f.seek(self.offset)
+            data = f.read()
+        end = data.rfind(b"\n") + 1
+        if end == 0:
+            return []
+        self.offset += end
+        return [ln for ln in data[:end].split(b"\n") if ln.strip()]
+
+
+def _append_lines(path: str, lines: List[bytes]) -> None:
+    """One O_APPEND write for the whole batch: concurrent appenders
+    (the destination's own writers included) never interleave partial
+    lines, same contract as ``evalcache.append_jsonl``."""
+    if not lines:
+        return
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    data = b"".join(ln + b"\n" for ln in lines)
+    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    try:
+        os.write(fd, data)
+    finally:
+        os.close(fd)
+
+
+class JournalLink:
+    """Bidirectional tail-ship between two journal files.  ``pump()``
+    ships the new complete lines each way and returns how many lines
+    crossed; the shared shipped-digest set suppresses echo."""
+
+    def __init__(self, a: str, b: str):
+        self.a, self.b = a, b
+        self._tails = (_Tail(a), _Tail(b))
+        self._shipped: set = set()
+
+    def pump(self) -> int:
+        ta, tb = self._tails
+        crossed = 0
+        for src, dst in ((ta, tb), (tb, ta)):
+            fresh: List[bytes] = []
+            for ln in src.lines():
+                digest = hashlib.sha256(ln).digest()
+                if digest in self._shipped:
+                    continue                 # our own earlier shipment
+                self._shipped.add(digest)
+                fresh.append(ln)
+            _append_lines(dst.path, fresh)
+            crossed += len(fresh)
+        return crossed
+
+
+class Replicator:
+    """A background loop pumping a set of ``JournalLink``s.  Links can
+    be added while running (``add`` dedupes by path pair); ``pump()``
+    forces one synchronous sweep — the fleet executor calls it after a
+    campaign so every host append is home before winners are read —
+    and ``stop()`` ends the thread after a final drain."""
+
+    def __init__(self, interval_s: float = 0.2):
+        self.interval_s = interval_s
+        self._links: Dict[Tuple[str, str], JournalLink] = {}
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.shipped = 0               # lifetime lines crossed (telemetry)
+
+    def add(self, a: str, b: str) -> JournalLink:
+        key = (a, b) if a <= b else (b, a)
+        with self._lock:
+            link = self._links.get(key)
+            if link is None:
+                link = JournalLink(a, b)
+                self._links[key] = link
+        return link
+
+    def pump(self) -> int:
+        """One synchronous sweep over every link; safe concurrently with
+        the background thread (per-link work is serialized under the
+        registry lock, which also orders the offset/digest updates)."""
+        with self._lock:
+            crossed = sum(link.pump() for link in self._links.values())
+            self.shipped += crossed
+        return crossed
+
+    # ------------------------------------------------------------------
+    def start(self) -> "Replicator":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop,
+                                            name="journal-replicator",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.pump()
+            self._wake.wait(self.interval_s)
+            self._wake.clear()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        self.pump()                    # final drain after the loop ends

@@ -20,7 +20,19 @@ the *scheduler's process* too.  A campaign hands its ``CaseJob``s to an
   scales to remote hosts over shared storage.
 * ``LocalClusterExecutor`` — multiplexes N persistent subprocess
   workers.  Workers persist across campaigns, amortizing spawn cost for
-  the serving autotuner's repeated cycles.
+  the serving autotuner's repeated cycles.  Its slot router is
+  **affinity-aware**: jobs on the same case prefer the worker that
+  already served that case (it holds the warm jit caches and MEP state),
+  falling back to work-stealing so no slot idles.
+* ``RemoteExecutor``        — the same eval-spec protocol over the
+  network: per-host worker slots speaking line-JSON over TCP sockets
+  (``scripts/remote_worker.py`` servers), an SSH-command transport that
+  reuses ``_WorkerProc`` with a remote spawn command (ssh pipes stdio),
+  and a ``spawn`` transport that launches loopback servers for
+  simulated fleets/CI.  Slot routing is host-affinity-aware; lease
+  paths and cache namespaces resolve *per host* from the spec wire
+  form; journals are shared via a common filesystem or the
+  ``repro.core.replicate`` tail-ship loop (over the same wire).
 
 Measured (wall-clock) platforms fan out across workers like analytic
 ones: every spec carries the campaign's **timing lease** (an flock'd
@@ -45,18 +57,19 @@ from __future__ import annotations
 import json
 import os
 import select
+import shlex
+import socket
 import subprocess
 import sys
 import tempfile
 import threading
 import time
-from dataclasses import dataclass
-from queue import Queue
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.aer import AER, WorkerFault
 from repro.core.diagnosis import diagnose_feedback
-from repro.core.evalcache import EvalCache, ResultsDB, json_safe
+from repro.core.evalcache import EvalCache, ResultsDB, json_safe, this_host
 from repro.core.kernelcase import KernelCase
 from repro.core.measure import (MeasureConfig, default_lease_path,
                                 resolve_lease)
@@ -75,8 +88,11 @@ class CaseJob:
     """One unit of campaign work: optimize ``case`` with ``proposer``."""
     case: KernelCase
     proposer: Proposer
-    cfg: OptConfig = OptConfig()
-    constraints: MEPConstraints = MEPConstraints()
+    # default_factory, NOT a shared instance: OptConfig is mutable, so a
+    # class-level default would alias per-job config mutation (setting
+    # one job's cfg.measure would silently set every defaulted job's)
+    cfg: OptConfig = field(default_factory=OptConfig)
+    constraints: MEPConstraints = field(default_factory=MEPConstraints)
     seed: int = 0
     mep: Optional[MEP] = None       # pre-built MEP (else built & shared)
     label: str = ""                 # distinguishes jobs on the same case
@@ -101,6 +117,11 @@ class WorkerContext:
     # worker timing this campaign's wall-clock sections
     measure: Optional[MeasureConfig] = None
     lease_path: Optional[str] = None
+    # when lease_path was *derived* (not caller-pinned), the derivation
+    # coordinates ({"cache": ..., "scope": ...}) travel in the spec so a
+    # worker on another host re-resolves the lease with its own
+    # hostname — a lease arbitrates ONE machine's CPUs, never a fleet's
+    lease_scope: Optional[Dict[str, Any]] = None
     # campaign-level default population-search policy (per-job
     # cfg.population wins); None → the greedy §3.2 loop
     population: Optional[PopulationConfig] = None
@@ -207,7 +228,7 @@ def run_case_job(job: CaseJob, platform: Platform, *,
                         res.speedup, bottleneck=last_bottleneck)
     if db:
         db.append("case_result", campaign=campaign_id,
-                  job=job.name, **res.to_dict())
+                  job=job.name, host=this_host(), **res.to_dict())
     if verbose:
         print(f"# campaign {job.name}: {res.best_time_s * 1e6:.2f}us, "
               f"{res.speedup:.2f}x over baseline, "
@@ -330,6 +351,7 @@ def _greedy_rounds(job: CaseJob, platform: Platform, res: OptResult,
             db.append(
                 "round", campaign=campaign_id, job=job.name,
                 case=case.name, round=d, worker=os.getpid(),
+                host=this_host(),
                 baseline_time_s=rl.baseline_time_s,
                 best_time_s=rl.best_time_s, improved=rl.improved,
                 stop_reason=stop,
@@ -362,16 +384,21 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
             "subprocess executors need a file-backed EvalCache (or none): "
             "an in-memory cache cannot be shared across processes")
     # cross-process timing lease: every worker timing this campaign's
-    # wall-clock sections must serialize on the same arbiter file.  The
-    # campaign provides one (next to its cache); for direct executor
-    # users the same rule is re-derived here, campaign-scoped — a
-    # measured platform must never fan out lease-less.
+    # wall-clock sections ON THE SAME HOST must serialize on the same
+    # arbiter file.  The campaign provides one (next to its cache,
+    # host-scoped); for direct executor users the same rule is
+    # re-derived here, campaign-scoped — a measured platform must never
+    # fan out lease-less.  ``lease_scope`` ships the derivation
+    # coordinates so a worker on ANOTHER host re-resolves the lease with
+    # its own hostname instead of contending with (or, worse, silently
+    # sharing eq. 3 slices with) the scheduler's host.
     lease = ctx.lease_path
+    lease_scope = ctx.lease_scope
     if lease is None and not getattr(ctx.platform, "concurrency_safe",
                                      False):
-        lease = default_lease_path(
-            ctx.cache.path if ctx.cache is not None else None,
-            scope=campaign_id)
+        cache_path = ctx.cache.path if ctx.cache is not None else None
+        lease = default_lease_path(cache_path, scope=campaign_id)
+        lease_scope = {"cache": cache_path, "scope": campaign_id}
     return {
         "job": {
             "case": job.case.to_dict(),
@@ -385,8 +412,14 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
             "scale": job.mep.scale if job.mep else None,
         },
         "platform": ctx.platform.name,
+        # a host-derived (default) namespace ships as None: the worker
+        # re-derives it locally, so measured records taken on host B are
+        # stamped host B and never replay as if timed on host A.  Only a
+        # caller-pinned namespace crosses the wire verbatim.
         "cache": None if ctx.cache is None else {
-            "path": ctx.cache.path, "ns": ctx.cache.namespace,
+            "path": ctx.cache.path,
+            "ns": ctx.cache.namespace
+            if getattr(ctx.cache, "ns_explicit", True) else None,
             "ttl_s": ctx.cache.ttl_s},
         # a file-backed PatternStore ships its coordinates so workers
         # record and suggest against the shared journal; an in-memory
@@ -398,6 +431,8 @@ def job_to_spec(job: CaseJob, ctx: WorkerContext, campaign_id: str
         "population": ctx.population.to_dict()
         if ctx.population else None,
         "lease": lease,
+        "lease_scope": lease_scope,
+        "host": this_host(),
         "campaign": campaign_id,
         "verbose": ctx.verbose,
         "stop": False,
@@ -417,6 +452,23 @@ def job_from_spec(spec: Dict[str, Any]) -> Tuple[CaseJob, Optional[int]]:
         label=j.get("label", ""))
     scale = j.get("scale")
     return job, (int(scale) if scale is not None else None)
+
+
+def lease_for_spec(spec: Dict[str, Any]) -> Optional[str]:
+    """The timing-lease path THIS host must use for ``spec``.  A lease
+    arbitrates contention for one machine's CPUs: when the spec was
+    built on another host (``spec["host"]``) and its lease path was
+    *derived* (``lease_scope`` present) rather than caller-pinned, the
+    worker re-derives it with its own hostname — sharing host A's
+    arbiter file from host B would serialize the fleet's wall-clock
+    slices against each other without protecting anything."""
+    lease = spec.get("lease")
+    scope = spec.get("lease_scope")
+    if scope is not None and spec.get("host") \
+            and spec["host"] != this_host():
+        return default_lease_path(scope.get("cache"),
+                                  scope=str(scope.get("scope") or ""))
+    return lease
 
 
 # ---------------------------------------------------------------------------
@@ -522,38 +574,38 @@ class InProcessExecutor(Executor):
 
 
 # ---------------------------------------------------------------------------
-class _WorkerProc:
-    """One worker subprocess + its pipe protocol.  stderr goes to a temp
-    file whose tail becomes the fault diagnostic on crash."""
+class _LineChannel:
+    """One endpoint of the line-JSON spec protocol over a byte stream.
+    The buffer holds raw *bytes*; a line is decoded only once its
+    terminating newline has arrived, so a multi-byte UTF-8 sequence
+    split across read chunks can never be torn (decoding chunk
+    boundaries with ``errors="replace"`` used to corrupt it)."""
 
-    def __init__(self, cmd: List[str], env: Dict[str, str], slot: int):
-        self.slot = slot
-        self.log = tempfile.NamedTemporaryFile(
-            mode="w+b", prefix=f"repro-worker{slot}-", suffix=".log",
-            delete=False)
-        self.proc = subprocess.Popen(
-            cmd, env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-            stderr=self.log, text=True, bufsize=1)
-        self._buf = ""
+    _buf: bytes = b""
+
+    # transport hooks ---------------------------------------------------
+    def _fd(self) -> int:
+        raise NotImplementedError
 
     def alive(self) -> bool:
-        return self.proc.poll() is None
+        raise NotImplementedError
 
-    def send(self, spec: Dict[str, Any]) -> None:
-        self.proc.stdin.write(json.dumps(spec) + "\n")
-        self.proc.stdin.flush()
+    def diagnostic(self) -> str:
+        return "peer closed"
 
+    # ------------------------------------------------------------------
     def recv(self, timeout_s: Optional[float]) -> Dict[str, Any]:
         """Read one protocol line; raises TimeoutError / EOFError."""
         deadline = None if timeout_s is None else \
             time.monotonic() + timeout_s
-        fd = self.proc.stdout.fileno()
+        fd = self._fd()
         while True:
-            nl = self._buf.find("\n")
+            nl = self._buf.find(b"\n")
             if nl >= 0:
                 line, self._buf = self._buf[:nl], self._buf[nl + 1:]
                 if line.strip():
-                    return json.loads(line)
+                    return json.loads(line.decode("utf-8",
+                                                  errors="replace"))
                 continue
             wait = None if deadline is None else deadline - time.monotonic()
             if wait is not None and wait <= 0:
@@ -564,10 +616,39 @@ class _WorkerProc:
                 if not self.alive() and not self._buf:
                     raise EOFError(self.diagnostic())
                 continue
-            chunk = os.read(fd, 65536).decode(errors="replace")
+            chunk = os.read(fd, 65536)
             if not chunk:
                 raise EOFError(self.diagnostic())
             self._buf += chunk
+
+
+class _WorkerProc(_LineChannel):
+    """One worker subprocess + its pipe protocol.  stderr goes to a temp
+    file whose tail becomes the fault diagnostic on crash.  The stdio
+    pipes are opened in *binary* mode: ``recv`` reads the raw fd (via
+    ``_LineChannel``), and a ``text=True`` TextIOWrapper sitting on the
+    same fd could strand bytes in its own buffer where the fd-level
+    reader would never see them."""
+
+    def __init__(self, cmd: List[str], env: Dict[str, str], slot: Any):
+        self.slot = slot
+        self._buf = b""
+        self.log = tempfile.NamedTemporaryFile(
+            mode="w+b", prefix=f"repro-worker{slot}-", suffix=".log",
+            delete=False)
+        self.proc = subprocess.Popen(
+            cmd, env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=self.log)
+
+    def _fd(self) -> int:
+        return self.proc.stdout.fileno()
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def send(self, spec: Dict[str, Any]) -> None:
+        self.proc.stdin.write((json.dumps(spec) + "\n").encode())
+        self.proc.stdin.flush()
 
     def diagnostic(self) -> str:
         code = self.proc.poll()
@@ -599,6 +680,48 @@ class _WorkerProc:
             pass
 
 
+class _SocketWorker(_LineChannel):
+    """Scheduler-side handle for one remote worker slot: the exact spec
+    protocol ``_WorkerProc`` speaks over pipes, over a TCP connection to
+    a ``scripts/remote_worker.py`` server.  One connection per slot —
+    the server serves each connection in its own thread, so a host's
+    slots evaluate concurrently."""
+
+    def __init__(self, address: str, slot: Any, *,
+                 connect_timeout_s: float = 30.0):
+        self.slot = slot
+        self.address = address
+        self._buf = b""
+        host, port = address.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)),
+                                             timeout=connect_timeout_s)
+        self.sock.setblocking(True)
+        self._closed = False
+
+    def _fd(self) -> int:
+        return self.sock.fileno()
+
+    def alive(self) -> bool:
+        return not self._closed
+
+    def send(self, spec: Dict[str, Any]) -> None:
+        self.sock.sendall((json.dumps(spec) + "\n").encode())
+
+    def diagnostic(self) -> str:
+        return f"remote worker {self.address} closed the connection"
+
+    def kill(self) -> None:
+        self._closed = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
 def _worker_cmd() -> List[str]:
     """Spawn command for scripts/worker_main.py, falling back to an
     inline import when the repo layout isn't present (installed use)."""
@@ -621,15 +744,77 @@ def _worker_env() -> Dict[str, str]:
     return env
 
 
+class _AffinityRouter:
+    """Case→host affinity work router for the multi-slot executors.
+
+    Consumers call ``get(host)``; the router prefers (1) a queued job
+    whose case this host already claimed — whoever evaluated a case's
+    first job holds the warm MEP build and jit/eval caches — then (2) a
+    job on an unclaimed case (claiming it for this host), then (3)
+    stealing any queued job so no slot idles while work remains.  A
+    steal does *not* reassign the claim: the original host keeps its
+    warmth for later jobs on the case.  ``get(None)`` is plain FIFO
+    (single-host executors).  ``close()`` wakes all consumers with
+    ``None``."""
+
+    def __init__(self) -> None:
+        self._cv = threading.Condition()
+        self._pending: List[Tuple] = []     # (idx, job, spec, attempt)
+        self._claims: Dict[str, Any] = {}   # case name → claiming host
+        self._closed = False
+
+    def put(self, item: Tuple) -> None:
+        with self._cv:
+            self._pending.append(item)
+            self._cv.notify_all()
+
+    def claim_of(self, case: str) -> Any:
+        with self._cv:
+            return self._claims.get(case)
+
+    def get(self, host: Any) -> Optional[Tuple]:
+        with self._cv:
+            while True:
+                if self._pending:
+                    pick = None
+                    if host is not None:
+                        unclaimed = None
+                        for it in self._pending:
+                            owner = self._claims.get(it[1].case.name)
+                            if owner == host:
+                                pick = it
+                                break
+                            if unclaimed is None and owner is None:
+                                unclaimed = it
+                        if pick is None:
+                            pick = unclaimed   # may still be None → steal
+                    if pick is None:
+                        pick = self._pending[0]
+                    self._pending.remove(pick)
+                    if host is not None:
+                        self._claims.setdefault(pick[1].case.name, host)
+                    return pick
+                if self._closed:
+                    return None
+                self._cv.wait(timeout=0.5)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+
 class SubprocessExecutor(Executor):
     """One MEP per worker process: N workers each pull serialized eval
-    specs off a queue, evaluate them in their own interpreter (their own
-    GIL, their own jit caches), and ship ``OptResult`` wire dicts back.
-    Crashes and timeouts become ``WorkerFault``s with automatic worker
-    replacement; the cache/journal files are the only shared state."""
+    specs off a work router, evaluate them in their own interpreter
+    (their own GIL, their own jit caches), and ship ``OptResult`` wire
+    dicts back.  Crashes and timeouts become ``WorkerFault``s with
+    automatic worker replacement; the cache/journal files are the only
+    shared state."""
 
     name = "subprocess"
     persistent = False        # workers live for one run() call
+    affinity = False          # enable case→host routing (_slot_host)
 
     def __init__(self, workers: Optional[int] = None, *,
                  timeout_s: Optional[float] = None, retries: int = 1):
@@ -662,6 +847,18 @@ class SubprocessExecutor(Executor):
         with self._lock:
             return self._slot_locks.setdefault(slot, threading.Lock())
 
+    def _slot_host(self, slot: Any) -> Any:
+        """Affinity unit for the router.  Each local worker process has
+        its own jit/eval caches, so locally the *slot* is the unit;
+        RemoteExecutor maps slots to their host label instead."""
+        return slot
+
+    def _spec_for_slot(self, spec: Dict[str, Any],
+                       slot: Any) -> Dict[str, Any]:
+        """Per-slot spec rewriting hook (RemoteExecutor remaps journal
+        paths for hosts that don't share the scheduler's filesystem)."""
+        return spec
+
     def _inject(self, job: CaseJob, spec: Dict[str, Any]) -> None:
         """Test-only fault injection hook: jobs may carry an ``inject``
         attribute (set by tests) that the worker honors before
@@ -683,9 +880,9 @@ class SubprocessExecutor(Executor):
             return []
         outcomes: List[Any] = [None] * len(jobs)
         slots = self._slots_for(ctx, len(jobs))
-        q: Queue = Queue()
+        router = _AffinityRouter()
         for i, (job, spec) in enumerate(zip(jobs, specs)):
-            q.put((i, job, spec, 0))
+            router.put((i, job, spec, 0))
         remaining = [len(jobs)]
 
         def finish(idx: int, outcome: Any) -> None:
@@ -693,8 +890,7 @@ class SubprocessExecutor(Executor):
             with self._lock:
                 remaining[0] -= 1
                 if remaining[0] == 0:
-                    for _ in slots:
-                        q.put(None)
+                    router.close()
 
         def fault(idx, job, spec, attempt, kind, detail, slot):
             """AER worker-fault handling: journal, replace the worker,
@@ -708,7 +904,7 @@ class SubprocessExecutor(Executor):
                 except OSError:
                     pass     # a full disk must not turn a retry into a hang
             if attempt < self.retries:
-                q.put((idx, job, spec, attempt + 1))
+                router.put((idx, job, spec, attempt + 1))
             else:
                 finish(idx, WorkerFault(kind, job.name, str(detail)[:500],
                                         attempts=attempt + 1))
@@ -716,6 +912,7 @@ class SubprocessExecutor(Executor):
         def dispatch(slot, idx, job, spec, attempt) -> None:
             if stop is not None and stop.is_set():
                 spec = dict(spec, stop=True)
+            spec = self._spec_for_slot(spec, slot)
             self.dispatch_log.append((job.name, slot))
             try:
                 with self._slot_lock(slot):
@@ -746,9 +943,10 @@ class SubprocessExecutor(Executor):
                     f"{reply.get('type', 'Error')}: "
                     f"{reply.get('error', 'worker error')}"))
 
-        def slot_loop(slot: int) -> None:
+        def slot_loop(slot: Any) -> None:
+            host = self._slot_host(slot) if self.affinity else None
             while True:
-                item = q.get()
+                item = router.get(host)
                 if item is None:
                     return
                 idx, job, spec, attempt = item
@@ -756,7 +954,7 @@ class SubprocessExecutor(Executor):
                     dispatch(slot, idx, job, spec, attempt)
                 except Exception as e:  # noqa: BLE001 — a scheduler-side
                     # error (bad reply shape, pattern-store I/O) must fail
-                    # THIS job, not strand the whole campaign in q.get()
+                    # THIS job, not strand the whole campaign in get()
                     finish(idx, e)
 
         threads = [threading.Thread(target=slot_loop, args=(s,),
@@ -779,12 +977,32 @@ class SubprocessExecutor(Executor):
         """Pre-spawn the worker processes and wait until each answers a
         protocol ping (interpreter + jax import done).  A persistent
         fabric (LocalClusterExecutor, the serving autotuner) calls this
-        once so campaign wall-clock measures evaluation, not startup."""
+        once so campaign wall-clock measures evaluation, not startup.
+
+        A worker dying mid-ping goes through the same replace-and-retry
+        path ``run`` uses — the dead process is killed and respawned and
+        the ping retried, honoring the retry budget — instead of leaving
+        a dead slot behind and raising raw EOFError at the caller.  A
+        slot that cannot come up surfaces as ``WorkerFault``."""
         for slot in (slots if slots is not None else range(self.workers)):
-            with self._slot_lock(slot):
-                w = self._ensure_worker(slot, None)
-                w.send({"ping": True})
-                w.recv(timeout_s)
+            last: Optional[BaseException] = None
+            for attempt in range(self.retries + 1):
+                try:
+                    with self._slot_lock(slot):
+                        w = self._ensure_worker(slot, None)
+                        w.send({"ping": True})
+                        w.recv(timeout_s)
+                    last = None
+                    break
+                except (TimeoutError, EOFError, OSError,
+                        BrokenPipeError, ValueError) as e:
+                    last = e
+                    self._replace_worker(slot)
+            if last is not None:
+                kind = "timeout" if isinstance(last, TimeoutError) \
+                    else "crash"
+                raise WorkerFault(kind, f"warm:{slot}", str(last)[:500],
+                                  attempts=self.retries + 1)
 
     # ------------------------------------------------------------------
     def _ensure_worker(self, slot: int, ctx: Optional[WorkerContext]
@@ -822,16 +1040,362 @@ class LocalClusterExecutor(SubprocessExecutor):
     platforms fan out across the whole pool — the pinned exclusive slot
     they used to get is gone; the cross-process timing lease serializes
     only the wall-clock slices while build/compile/FE/LLM work overlaps
-    freely."""
+    freely.  Slot routing is affinity-aware: jobs on a case prefer the
+    worker process that already served that case (warm jit/eval caches),
+    with work-stealing as the fallback."""
 
     name = "local-cluster"
     persistent = True
+    affinity = True
+
+
+# ---------------------------------------------------------------------------
+# networked fleet
+# ---------------------------------------------------------------------------
+@dataclass
+class FleetHost:
+    """One machine in a campaign fleet.  The configured ``name`` IS the
+    host's fleet-wide identity: it ships to the worker as
+    ``REPRO_HOST_ALIAS``, so the measured-cache namespace, the timing
+    lease, and every journal's ``host`` provenance key on it (stable
+    across DHCP renames, and distinct for simulated loopback hosts).
+
+    Transports:
+
+    * ``spawn``  — the executor launches ``scripts/remote_worker.py`` as
+      a local loopback server and connects over TCP: a *simulated* fleet
+      host for CI/benchmarks that exercises the exact socket + per-host
+      namespace/lease code paths of a real one.
+    * ``socket`` — connect to an already-running
+      ``scripts/remote_worker.py`` at ``address`` (``"host:port"``).
+    * ``ssh``    — spawn the stdio worker on the remote machine through
+      ``ssh`` (reusing ``_WorkerProc``: ssh pipes stdio across the
+      wire); ``ssh`` is the target (``user@host``), ``python`` the
+      remote interpreter, ``workdir`` an optional remote repo checkout
+      to run from (its ``src/`` is put on PYTHONPATH).
+
+    ``slots`` is how many jobs the host evaluates concurrently (one
+    socket connection / ssh pipe per slot).  ``cache_path`` /
+    ``patterns_path`` / ``db_path`` remap the spec's journal paths for
+    hosts that do NOT share the scheduler's filesystem; the executor's
+    ``repro.core.replicate`` loop then tail-ships appends both ways
+    (unset → shared filesystem, no rewriting)."""
+    name: str
+    transport: str = "spawn"          # spawn | socket | ssh
+    address: str = ""                 # socket: "host:port"
+    ssh: str = ""                     # ssh: "user@host"
+    python: str = ""                  # ssh: remote interpreter
+    workdir: str = ""                 # ssh: remote repo checkout
+    slots: int = 1
+    cache_path: str = ""
+    patterns_path: str = ""
+    db_path: str = ""
+
+    @staticmethod
+    def from_dict(d: Union[str, Dict[str, Any]]) -> "FleetHost":
+        if isinstance(d, str):
+            return FleetHost(name=d)          # shorthand: spawn, 1 slot
+        return FleetHost(**d)
+
+
+def _remote_worker_cmd() -> List[str]:
+    here = os.path.dirname(os.path.abspath(__file__))
+    script = os.path.abspath(os.path.join(here, "..", "..", "..",
+                                          "scripts", "remote_worker.py"))
+    if not os.path.exists(script):
+        raise FileNotFoundError(
+            f"scripts/remote_worker.py not found at {script} — the spawn "
+            f"transport needs the repo layout")
+    return [sys.executable, "-u", script]
+
+
+def _ssh_worker_cmd(host: "FleetHost") -> List[str]:
+    """ssh command whose stdio IS the worker pipe: `_WorkerProc` with a
+    remote spawn command.  BatchMode keeps a missing key from hanging
+    the fabric on a password prompt."""
+    py = host.python or "python3"
+    inner = (f"{py} -u -c "
+             + shlex.quote("from repro.core.workers import worker_main; "
+                           "raise SystemExit(worker_main())"))
+    env = f"REPRO_HOST_ALIAS={shlex.quote(host.name)}"
+    if host.workdir:
+        wd = shlex.quote(host.workdir)
+        remote = (f"cd {wd} && env {env} "
+                  f"PYTHONPATH={wd}/src:\"$PYTHONPATH\" {inner}")
+    else:
+        remote = f"env {env} {inner}"
+    return ["ssh", "-o", "BatchMode=yes", host.ssh, remote]
+
+
+class _ServerProc:
+    """A spawned loopback ``remote_worker.py`` server: one per spawn
+    host, shared by all that host's slots.  stderr goes to a temp log
+    (jax chatter + diagnostics); the bound port is read from the
+    ``READY <port>`` stdout line."""
+
+    def __init__(self, host: "FleetHost", timeout_s: float = 120.0):
+        self.host = host
+        self.log = tempfile.NamedTemporaryFile(
+            mode="w+b", prefix=f"repro-fleet-{host.name}-", suffix=".log",
+            delete=False)
+        env = _worker_env()
+        env["REPRO_HOST_ALIAS"] = host.name
+        self.proc = subprocess.Popen(
+            _remote_worker_cmd() + ["--port", "0", "--alias", host.name],
+            env=env, stdin=subprocess.DEVNULL, stdout=subprocess.PIPE,
+            stderr=self.log)
+        self.port = self._read_ready(timeout_s)
+
+    def _read_ready(self, timeout_s: float) -> int:
+        deadline = time.monotonic() + timeout_s
+        fd = self.proc.stdout.fileno()
+        buf = b""
+        while True:
+            nl = buf.find(b"\n")
+            if nl >= 0:
+                line, buf = buf[:nl], buf[nl + 1:]
+                if line.startswith(b"READY "):
+                    return int(line.split()[1])
+                continue          # jax may chat on stdout before READY
+            wait = deadline - time.monotonic()
+            if wait <= 0:
+                self.kill()
+                raise TimeoutError(
+                    f"fleet host {self.host.name}: server not READY "
+                    f"within {timeout_s}s")
+            ready, _, _ = select.select([fd], [], [], min(wait, 1.0))
+            if not ready:
+                if self.proc.poll() is not None:
+                    raise EOFError(
+                        f"fleet host {self.host.name}: server exited "
+                        f"{self.proc.poll()} before READY")
+                continue
+            chunk = os.read(fd, 65536)
+            if not chunk:
+                raise EOFError(
+                    f"fleet host {self.host.name}: server closed stdout "
+                    f"before READY (exit={self.proc.poll()})")
+            buf += chunk
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def kill(self) -> None:
+        try:
+            if self.alive():
+                self.proc.terminate()
+            self.proc.wait(timeout=5)
+        except (OSError, subprocess.TimeoutExpired):
+            try:
+                self.proc.kill()
+            except OSError:
+                pass
+        for h in (self.proc.stdout, self.log):
+            try:
+                h.close()
+            except OSError:
+                pass
+        try:
+            os.unlink(self.log.name)
+        except OSError:
+            pass
+
+
+class RemoteExecutor(SubprocessExecutor):
+    """The eval-spec protocol over the network: one campaign saturating
+    N hosts.  Slots are ``(host, i)`` pairs; each slot speaks the exact
+    line-JSON protocol ``_WorkerProc`` uses over pipes — over a TCP
+    connection to a ``scripts/remote_worker.py`` server (``socket`` /
+    ``spawn`` transports) or over an ssh-piped stdio worker (``ssh``).
+
+    Per-host resolution happens in the spec wire form, not here: a
+    host-derived cache/pattern namespace ships as None and is re-derived
+    worker-side under the host's ``REPRO_HOST_ALIAS`` (so measured
+    records carry the host that timed them and never replay elsewhere),
+    and a derived lease path is re-derived per host from ``lease_scope``
+    (a lease arbitrates ONE machine's CPUs).  Journals are shared via a
+    common filesystem, or — for hosts with ``cache_path`` /
+    ``patterns_path`` / ``db_path`` remaps — by the
+    ``repro.core.replicate`` tail-ship loop, which pumps O_APPEND lines
+    both ways between the scheduler's journals and each host's (both
+    stores merge on replay, so replication is just tail-ship + replay).
+
+    Routing is host-affinity-aware (``_AffinityRouter``): jobs on a case
+    prefer the host that already built its MEP and holds warm jit/eval
+    caches, with cross-host work-stealing so no slot idles."""
+
+    name = "remote"
+    persistent = True
+    affinity = True
+
+    def __init__(self, hosts: List[Union[str, Dict[str, Any], FleetHost]],
+                 *, timeout_s: Optional[float] = None, retries: int = 1,
+                 server_timeout_s: float = 120.0):
+        hosts = [h if isinstance(h, FleetHost) else FleetHost.from_dict(h)
+                 for h in hosts]
+        if not hosts:
+            raise ValueError("RemoteExecutor needs at least one FleetHost")
+        names = [h.name for h in hosts]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate fleet host names: {names}")
+        for h in hosts:
+            if h.transport not in ("spawn", "socket", "ssh"):
+                raise ValueError(
+                    f"fleet host {h.name}: unknown transport "
+                    f"{h.transport!r} (spawn|socket|ssh)")
+            if h.transport == "socket" and ":" not in h.address:
+                raise ValueError(f"fleet host {h.name}: socket transport "
+                                 f"needs address='host:port'")
+            if h.transport == "ssh" and not h.ssh:
+                raise ValueError(f"fleet host {h.name}: ssh transport "
+                                 f"needs ssh='user@host'")
+        super().__init__(sum(max(1, h.slots) for h in hosts),
+                         timeout_s=timeout_s, retries=retries)
+        self.hosts: Dict[str, FleetHost] = {h.name: h for h in hosts}
+        self.server_timeout_s = server_timeout_s
+        self._servers: Dict[str, _ServerProc] = {}
+        self._server_lock = threading.Lock()
+        self._replicator = None       # lazy repro.core.replicate.Replicator
+
+    # -- slots ---------------------------------------------------------
+    def _all_slots(self) -> List[Tuple[str, int]]:
+        """Host slots interleaved round-robin, so a job list shorter
+        than the fleet still spreads across hosts."""
+        cols = [[(h.name, i) for i in range(max(1, h.slots))]
+                for h in self.hosts.values()]
+        out: List[Tuple[str, int]] = []
+        depth = max(len(c) for c in cols)
+        for i in range(depth):
+            out.extend(c[i] for c in cols if i < len(c))
+        return out
+
+    def _slots_for(self, ctx: WorkerContext, n_jobs: int
+                   ) -> List[Tuple[str, int]]:
+        slots = self._all_slots()
+        return slots[:max(1, n_jobs)] if n_jobs < len(slots) else slots
+
+    def _slot_host(self, slot: Tuple[str, int]) -> str:
+        return slot[0]
+
+    # -- per-host spec rewriting ---------------------------------------
+    def _spec_for_slot(self, spec: Dict[str, Any],
+                       slot: Tuple[str, int]) -> Dict[str, Any]:
+        host = self.hosts[slot[0]]
+        if not (host.cache_path or host.patterns_path or host.db_path):
+            return spec            # shared filesystem: nothing to remap
+        spec = dict(spec)
+        if host.cache_path and spec.get("cache"):
+            spec["cache"] = dict(spec["cache"], path=host.cache_path)
+            if spec.get("lease_scope"):
+                # the derived lease keys on the cache path: keep the
+                # worker's re-derivation anchored to ITS journal file
+                spec["lease_scope"] = dict(spec["lease_scope"],
+                                           cache=host.cache_path)
+        if host.patterns_path and spec.get("patterns"):
+            spec["patterns"] = dict(spec["patterns"],
+                                    path=host.patterns_path)
+        if host.db_path and spec.get("db"):
+            spec["db"] = host.db_path
+        return spec
+
+    # -- journal replication -------------------------------------------
+    def _ensure_replicator(self, ctx: WorkerContext):
+        pairs: List[Tuple[str, str]] = []
+        for h in self.hosts.values():
+            if h.cache_path and ctx.cache is not None and ctx.cache.path:
+                pairs.append((ctx.cache.path, h.cache_path))
+            if h.patterns_path and ctx.patterns is not None \
+                    and ctx.patterns.path:
+                pairs.append((ctx.patterns.path, h.patterns_path))
+            if h.db_path and ctx.db is not None:
+                pairs.append((ctx.db.path, h.db_path))
+        if not pairs:
+            return None
+        with self._server_lock:
+            if self._replicator is None:
+                from repro.core.replicate import Replicator
+                self._replicator = Replicator()
+                self._replicator.start()
+            for a, b in pairs:
+                self._replicator.add(a, b)
+        return self._replicator
+
+    def run(self, jobs, ctx, *, campaign_id="", stop=None):
+        repl = self._ensure_replicator(ctx)
+        outcomes = super().run(jobs, ctx, campaign_id=campaign_id,
+                               stop=stop)
+        if repl is not None:
+            # final drain: every append a host made during the campaign
+            # is home before the scheduler reads winners/journals
+            repl.pump()
+            if ctx.cache is not None:
+                ctx.cache.reload()
+            if ctx.patterns is not None and ctx.patterns.path:
+                ctx.patterns.reload()
+        return outcomes
+
+    # -- transports ----------------------------------------------------
+    def _server_port(self, host: FleetHost) -> int:
+        with self._server_lock:
+            srv = self._servers.get(host.name)
+            if srv is None or not srv.alive():
+                if srv is not None:
+                    srv.kill()
+                srv = _ServerProc(host, timeout_s=self.server_timeout_s)
+                self._servers[host.name] = srv
+            return srv.port
+
+    def _connect(self, slot: Tuple[str, int]):
+        host = self.hosts[slot[0]]
+        if host.transport == "ssh":
+            return _WorkerProc(_ssh_worker_cmd(host), dict(os.environ),
+                               slot)
+        if host.transport == "socket":
+            address = host.address
+        elif host.transport == "spawn":
+            address = f"127.0.0.1:{self._server_port(host)}"
+        else:
+            raise ValueError(f"fleet host {host.name}: unknown transport "
+                             f"{host.transport!r} (spawn|socket|ssh)")
+        return _SocketWorker(address, slot)
+
+    def _ensure_worker(self, slot: Tuple[str, int],
+                       ctx: Optional[WorkerContext]):
+        # connect OUTSIDE self._lock: a slow server start must not block
+        # other hosts' slots (the per-slot protocol lock in dispatch()
+        # already serializes re-entry for this slot)
+        with self._lock:
+            w = self._procs.get(slot)
+            if w is not None and w.alive():
+                return w
+        w = self._connect(slot)
+        with self._lock:
+            self._procs[slot] = w
+        return w
+
+    def warm(self, slots=None, timeout_s: float = 120.0) -> None:
+        super().warm(self._all_slots() if slots is None else slots,
+                     timeout_s)
+
+    def close(self) -> None:
+        with self._server_lock:
+            repl, self._replicator = self._replicator, None
+        if repl is not None:
+            repl.stop()           # stop() takes a final drain pump
+        super().close()           # closes slot connections / ssh pipes
+        with self._server_lock:
+            servers, self._servers = list(self._servers.values()), {}
+        for srv in servers:
+            srv.kill()
 
 
 def make_executor(kind: Optional[str], *, workers: Optional[int] = None,
-                  timeout_s: Optional[float] = None) -> Executor:
+                  timeout_s: Optional[float] = None,
+                  hosts: Optional[List[Any]] = None) -> Executor:
     """Executor factory behind the ``--executor=`` / ``executor=`` knobs
-    (None → REPRO_CAMPAIGN_EXECUTOR, default in-process)."""
+    (None → REPRO_CAMPAIGN_EXECUTOR, default in-process).  ``remote``
+    takes its fleet from ``hosts`` (FleetHost / dict / name strings) or
+    the ``REPRO_FLEET_HOSTS`` env var (a JSON list of the same)."""
     if kind is None:
         kind = os.environ.get("REPRO_CAMPAIGN_EXECUTOR", "inprocess")
     kind = kind.replace("_", "-")
@@ -843,8 +1407,18 @@ def make_executor(kind: Optional[str], *, workers: Optional[int] = None,
         return SubprocessExecutor(workers, timeout_s=timeout_s)
     if kind in ("local-cluster", "cluster"):
         return LocalClusterExecutor(workers, timeout_s=timeout_s)
+    if kind in ("remote", "fleet"):
+        if hosts is None:
+            env = os.environ.get("REPRO_FLEET_HOSTS", "")
+            if not env:
+                raise ValueError(
+                    "remote executor needs hosts=[...] or "
+                    "REPRO_FLEET_HOSTS (JSON list of FleetHost dicts "
+                    "or name strings)")
+            hosts = json.loads(env)
+        return RemoteExecutor(hosts, timeout_s=timeout_s)
     raise ValueError(f"unknown executor {kind!r}; choose from "
-                     f"inprocess, subprocess, local-cluster")
+                     f"inprocess, subprocess, local-cluster, remote")
 
 
 # ---------------------------------------------------------------------------
@@ -868,57 +1442,52 @@ def _apply_inject(inject: Dict[str, Any]) -> None:
         time.sleep(float(inject["sleep_s"]))
 
 
-def worker_main() -> int:
-    """Line-JSON worker loop: read an eval spec, run the §3.2 search for
-    its job, write the full OptResult back.  One long-lived process
-    serves many jobs; platform/cache/db handles are cached per spec
-    coordinates."""
-    # The pipe to the scheduler is fd 1 at startup.  Everything else the
-    # worker (or jax) prints must go to stderr, so dup the protocol fd
-    # away and point stdout at stderr.
-    proto = os.fdopen(os.dup(1), "w", buffering=1)
-    os.dup2(2, 1)
-    sys.stdout = os.fdopen(1, "w", buffering=1)
+class _SpecServer:
+    """The worker-side spec interpreter, shared by every transport: one
+    instance per worker *process*, handling eval specs one
+    ``handle(spec) → reply`` call at a time (or concurrently, from the
+    remote server's connection threads).  Platform/cache/store/db
+    handles are memoized per spec coordinates so a long-lived process
+    serving many jobs keeps its warm jit/eval caches."""
 
-    platforms: Dict[str, Platform] = {}
-    caches: Dict[Tuple, EvalCache] = {}
-    stores: Dict[Tuple, PatternStore] = {}
-    dbs: Dict[str, ResultsDB] = {}
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._platforms: Dict[str, Platform] = {}
+        self._caches: Dict[Tuple, EvalCache] = {}
+        self._stores: Dict[Tuple, PatternStore] = {}
+        self._dbs: Dict[str, ResultsDB] = {}
 
-    for line in sys.stdin:
-        line = line.strip()
-        if not line:
-            continue
+    def handle(self, spec: Dict[str, Any]) -> Dict[str, Any]:
         try:
-            spec = json.loads(line)
             if spec.get("ping"):
-                proto.write(json.dumps({"ok": True, "pong": True}) + "\n")
-                proto.flush()
-                continue
+                return {"ok": True, "pong": True, "host": this_host()}
             _apply_inject(spec.get("inject") or {})
             job, scale = job_from_spec(spec)
             pname = spec["platform"]
-            if pname not in platforms:
-                platforms[pname] = platform_from_name(pname)
-            platform = platforms[pname]
-            cache = None
-            if spec.get("cache"):
-                c = spec["cache"]
-                ck = (c["path"], c.get("ns"), c.get("ttl_s"))
-                if ck not in caches:
-                    caches[ck] = EvalCache(c["path"], namespace=c.get("ns"),
-                                           ttl_s=c.get("ttl_s"))
-                cache = caches[ck]
-            patterns = None
-            if spec.get("patterns"):
-                ps = spec["patterns"]
-                sk = (ps["path"], ps.get("ns"))
-                if sk not in stores:
-                    stores[sk] = PatternStore.from_spec(ps)
-                patterns = stores[sk]
-            db = None
-            if spec.get("db"):
-                db = dbs.setdefault(spec["db"], ResultsDB(spec["db"]))
+            with self._lock:
+                if pname not in self._platforms:
+                    self._platforms[pname] = platform_from_name(pname)
+                platform = self._platforms[pname]
+                cache = None
+                if spec.get("cache"):
+                    c = spec["cache"]
+                    ck = (c["path"], c.get("ns"), c.get("ttl_s"))
+                    if ck not in self._caches:
+                        self._caches[ck] = EvalCache(
+                            c["path"], namespace=c.get("ns"),
+                            ttl_s=c.get("ttl_s"))
+                    cache = self._caches[ck]
+                patterns = None
+                if spec.get("patterns"):
+                    ps = spec["patterns"]
+                    sk = (ps["path"], ps.get("ns"))
+                    if sk not in self._stores:
+                        self._stores[sk] = PatternStore.from_spec(ps)
+                    patterns = self._stores[sk]
+                db = None
+                if spec.get("db"):
+                    db = self._dbs.setdefault(spec["db"],
+                                              ResultsDB(spec["db"]))
             stop_event = threading.Event()
             if spec.get("stop"):
                 stop_event.set()
@@ -931,14 +1500,40 @@ def worker_main() -> int:
                 cache=cache, patterns=patterns, db=db,
                 stop_event=stop_event,
                 verbose=spec.get("verbose", False), scale=scale,
-                measure=measure, lease_path=spec.get("lease"),
+                measure=measure, lease_path=lease_for_spec(spec),
                 population=pop_cfg)
-            reply = {"ok": True, "result": res.to_dict(full=True)}
+            return {"ok": True, "result": res.to_dict(full=True)}
         except Exception as e:  # noqa: BLE001 — job errors go to scheduler
             import traceback
-            reply = {"ok": False, "type": type(e).__name__,
-                     "error": f"{e}"[:1000],
-                     "traceback": traceback.format_exc()[-2000:]}
+            return {"ok": False, "type": type(e).__name__,
+                    "error": f"{e}"[:1000],
+                    "traceback": traceback.format_exc()[-2000:]}
+
+
+def worker_main() -> int:
+    """Line-JSON worker loop over stdio: read an eval spec, run the §3.2
+    search for its job, write the full OptResult back (the socket
+    transport runs the same ``_SpecServer`` behind
+    ``scripts/remote_worker.py``)."""
+    # The pipe to the scheduler is fd 1 at startup.  Everything else the
+    # worker (or jax) prints must go to stderr, so dup the protocol fd
+    # away and point stdout at stderr.
+    proto = os.fdopen(os.dup(1), "w", buffering=1)
+    os.dup2(2, 1)
+    sys.stdout = os.fdopen(1, "w", buffering=1)
+
+    server = _SpecServer()
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            spec = json.loads(line)
+        except ValueError as e:
+            reply: Dict[str, Any] = {"ok": False, "type": "ProtocolError",
+                                     "error": f"{e}"[:1000]}
+        else:
+            reply = server.handle(spec)
         proto.write(json.dumps(json_safe(reply), default=str) + "\n")
         proto.flush()
     return 0

@@ -23,6 +23,7 @@ from repro.core import (Campaign, CaseJob, CPUPlatform, EvalCache,
                         SubprocessExecutor, TPUModelPlatform, WorkerContext,
                         WorkerFault, canonical_spec, get_case, optimize,
                         platform_from_name)
+from repro.core.evalcache import this_host
 from repro.core.kernelcase import KernelCase
 from repro.core.proposer import Proposer
 from repro.core.workers import job_from_spec, job_to_spec
@@ -312,7 +313,7 @@ def test_measured_platform_fans_out_with_lease():
     with _tf.TemporaryDirectory() as d:
         cache = EvalCache(os.path.join(d, "ec.jsonl"))
         spec = job_to_spec(_job(), _ctx(CPUPlatform(), cache=cache), "c1")
-        assert spec["lease"] == cache.path + ".timelease"
+        assert spec["lease"] == cache.path + ".timelease@" + this_host()
     # analytic platforms need no lease
     spec = job_to_spec(_job(), _ctx(TPUModelPlatform()), "c2")
     assert spec["lease"] is None
