@@ -1,6 +1,6 @@
 .PHONY: verify test-fast test-workers test-conformance test-measure \
-	test-serve test-kernels test-population test-fleet bench bench-full \
-	bench-serve
+	test-serve test-kernels test-population test-fleet test-chaos bench \
+	bench-full bench-serve
 
 # Tier-1 tests (ROADMAP.md)
 verify:
@@ -62,6 +62,14 @@ test-population:
 test-fleet:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 		python -m pytest -q tests/test_fleet.py
+
+# Fault-injection suite: scripted FaultPlans (kill / torn reply / stall /
+# corrupt journal), reconnect backoff, quarantine + readmission, and the
+# replication-safe compaction legs — loopback only, no real SSH (the CI
+# test-chaos job)
+test-chaos:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+		python -m pytest -q tests/test_chaos.py
 
 # Old-vs-new serving benchmark (table 9) on the reduced LM
 bench-serve:

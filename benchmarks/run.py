@@ -106,7 +106,7 @@ def main() -> None:
                             table4_hotspots, table5_serve, table6_workers,
                             table7_ppi, table8_measure, table9_serving,
                             table10_diagnosis, table11_population,
-                            table12_fleet)
+                            table12_fleet, table13_chaos)
 
     measure = None
     if args.fixed_r or args.ci_rel is not None or args.no_race:
@@ -173,6 +173,7 @@ def main() -> None:
         "10": ("table10_diagnosis", table10_diagnosis.main),
         "11": ("table11_population", table11_population.main),
         "12": ("table12_fleet", table12_fleet.main),
+        "13": ("table13_chaos", table13_chaos.main),
         "hillclimb": ("perf_hillclimb", perf_hillclimb.main),
     }
     table_ids = [t.strip() for t in args.tables.split(",")]

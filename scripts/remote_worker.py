@@ -55,6 +55,7 @@ def serve_connection(conn: socket.socket, state) -> None:
                 line, buf = buf[:nl], buf[nl + 1:]
                 if not line.strip():
                     continue
+                drops = []
                 try:
                     spec = json.loads(line.decode("utf-8",
                                                   errors="replace"))
@@ -62,9 +63,16 @@ def serve_connection(conn: socket.socket, state) -> None:
                     reply = {"ok": False, "type": "ProtocolError",
                              "error": f"{e}"[:500]}
                 else:
-                    reply = state.handle(spec)
-                conn.sendall((json.dumps(json_safe(reply), default=str)
-                              + "\n").encode())
+                    reply, drops = state.handle_with_faults(spec)
+                data = (json.dumps(json_safe(reply), default=str)
+                        + "\n").encode()
+                if drops:
+                    # scripted drop_connection: tear the reply mid-line
+                    # and hang up — the scheduler must survive a torn
+                    # line as EOF (crash fault → retry), never parse it
+                    conn.sendall(data[:max(1, len(data) // 2)])
+                    return
+                conn.sendall(data)
     except OSError:
         pass                      # peer reset: the slot is simply gone
     finally:

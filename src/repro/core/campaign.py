@@ -178,11 +178,15 @@ class Campaign:
         failures = [(j, o) for j, o in zip(jobs, outcomes)
                     if isinstance(o, Exception)]
         oks = [o for o in outcomes if isinstance(o, OptResult)]
+        fleet_events = getattr(self.executor, "fleet_events", None)
         if self.db:
             self.db.append(
                 "campaign_end", id=campaign_id,
                 wall_s=round(time.time() - t0, 3),
                 cache=self.cache.stats() if self.cache else None,
+                # fleet fault-tolerance counters (RemoteExecutor only):
+                # reconnects / quarantines / readmissions / reroutes
+                fleet=fleet_events() if callable(fleet_events) else None,
                 # campaign-level PPI health: how many inherited hints
                 # were suggested vs. actually landed in round winners
                 hints_suggested=sum(o.hints_suggested for o in oks),

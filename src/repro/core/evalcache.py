@@ -123,6 +123,64 @@ def append_jsonl(path: str, rec: Dict[str, Any]) -> int:
     return len(data)
 
 
+# ---------------------------------------------------------------------------
+# compaction-epoch markers (replication coordination)
+# ---------------------------------------------------------------------------
+# Compacting a journal rewrites it through ``os.replace`` — an inode
+# swap that invalidates every byte offset other readers hold, including
+# the ``repro.core.replicate`` tail-ship loop's.  Every compaction
+# therefore (1) first drains any live Replicator whose link ends at
+# this journal, so nothing appended-but-not-yet-shipped is folded away,
+# and (2) writes a **compaction-epoch marker** as the rewritten file's
+# last line.  A resyncing tail finds the last marker and resumes just
+# past it: everything before the marker is the compacted snapshot
+# (replayed through the shipped-digest filter, so nothing re-ships),
+# everything after is fresh appends.  Markers are per-file coordination
+# state and are never shipped across a link.
+
+COMPACT_EV = "compact"
+
+
+def compaction_marker(epoch: int) -> Dict[str, Any]:
+    """The journal line a compaction writes last: names the rewrite so
+    offset-tracking readers can distinguish 'compacted' from
+    'truncated/rotated' and resume precisely."""
+    return {"ev": COMPACT_EV, "epoch": int(epoch), "host": this_host(),
+            "pid": os.getpid(), "ts": time.time()}
+
+
+def marker_epoch(line: bytes) -> Optional[int]:
+    """The epoch if ``line`` is a compaction marker, else None."""
+    if b'"ev"' not in line:
+        return None
+    try:
+        obj = json.loads(line.decode("utf-8", errors="replace"))
+    except ValueError:
+        return None
+    if isinstance(obj, dict) and obj.get("ev") == COMPACT_EV:
+        try:
+            return int(obj.get("epoch", 0))
+        except (TypeError, ValueError):
+            return 0
+    return None
+
+
+def drain_replicas(path: str) -> int:
+    """Pre-compaction coordination: synchronously pump every live
+    Replicator with ``path`` as a link endpoint, so lines appended since
+    the last sweep ship verbatim before the rewrite folds them into the
+    snapshot.  Must be called *before* taking the store flock (the pump
+    appends under the destination's flock).  A no-op when
+    ``repro.core.replicate`` was never imported."""
+    if not path:
+        return 0
+    import sys
+    mod = sys.modules.get("repro.core.replicate")
+    if mod is None:
+        return 0
+    return mod.drain_endpoint(path)
+
+
 @dataclass
 class EvalRecord:
     status: str = "ok"            # ok | build_error | fe_fail | run_error
@@ -202,6 +260,9 @@ class EvalCache:
     optional JSONL persistence.  Duplicate keys resolve to the last
     record."""
 
+    COMPACT_MIN_LINES = 256  # journal lines before compaction considered
+    COMPACT_RATIO = 4        # compact when lines > ratio * distinct keys
+
     def __init__(self, path: Optional[str] = None, *,
                  namespace: Optional[str] = None,
                  ttl_s: Optional[float] = None):
@@ -222,6 +283,9 @@ class EvalCache:
         self._records: Dict[str, EvalRecord] = {}
         self._pending: Dict[str, threading.Event] = {}
         self._offset = 0             # how far into the file we have read
+        self._ino: Optional[int] = None
+        self._lines = 0              # journal lines behind the view
+        self._epoch = 0              # last compaction epoch replayed
         self.hits = 0
         self.misses = 0
         self.waits = 0        # in-flight dedup: waited on another worker
@@ -235,10 +299,21 @@ class EvalCache:
         """Read records appended since the last load (our own or another
         process's).  Caller holds self._lock.  A final line without a
         trailing newline is a write still in flight — leave it for the
-        next reload rather than consuming a torn prefix."""
+        next reload rather than consuming a torn prefix.  The stat is an
+        ``fstat`` on the opened fd so the inode-swap check and the read
+        see the same file: when another process compacted the journal
+        (inode changed, or it shrank below our offset) the view is
+        rebuilt from the rewritten file — replay is last-wins per key,
+        so nothing is lost."""
         if not self.path or not os.path.exists(self.path):
             return
         with open(self.path, "rb") as f:
+            st = os.fstat(f.fileno())
+            if self._ino is not None and \
+                    (st.st_ino != self._ino or st.st_size < self._offset):
+                self._offset, self._lines = 0, 0
+                self._records = {}
+            self._ino = st.st_ino
             f.seek(self._offset)
             data = f.read()
         if not data:
@@ -251,8 +326,14 @@ class EvalCache:
             line = line.strip()
             if not line:
                 continue
+            self._lines += 1
             try:
-                rec = EvalRecord.from_dict(json.loads(line.decode()))
+                obj = json.loads(line.decode())
+                if isinstance(obj, dict) and obj.get("ev") == COMPACT_EV:
+                    self._epoch = max(self._epoch,
+                                      int(obj.get("epoch", 0) or 0))
+                    continue
+                rec = EvalRecord.from_dict(obj)
             except (ValueError, TypeError, KeyError, UnicodeDecodeError):
                 # a crash mid-append leaves a torn line; losing one
                 # record must not lose the whole cache
@@ -373,7 +454,53 @@ class EvalCache:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        append_jsonl(self.path, rec.to_dict())
+        # the store flock serializes this append against a concurrent
+        # compaction's read-merge-os.replace in another process — an
+        # unlocked append landing between the snapshot read and the
+        # replace would be silently dropped by the rewrite
+        with FileLock(self.path + ".lock"):
+            append_jsonl(self.path, rec.to_dict())
+        self._lines += 1
+        self._maybe_compact_locked()
+
+    def _maybe_compact_locked(self) -> None:
+        if not self.path or self._lines < self.COMPACT_MIN_LINES:
+            return
+        if self._lines <= self.COMPACT_RATIO * max(1, len(self._records)):
+            return
+        self._compact_locked()
+
+    def compact(self) -> None:
+        """Force a journal compaction: rewrite the file as one line per
+        distinct key (all namespaces preserved — a measured record from
+        another host must survive the rewrite even though *this* cache
+        would reject it on lookup), ending with a compaction-epoch
+        marker so replication tails resync instead of re-shipping."""
+        with self._lock:
+            self._compact_locked()
+
+    def _compact_locked(self) -> None:
+        """Caller holds self._lock (and must NOT hold the store flock:
+        the pre-compaction replica drain appends under it)."""
+        if not self.path:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        drain_replicas(self.path)
+        with FileLock(self.path + ".lock"):
+            self._reload_locked()
+            self._epoch += 1
+            tmp = f"{self.path}.tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                for rec in self._records.values():
+                    f.write(json.dumps(rec.to_dict(), default=str) + "\n")
+                f.write(json.dumps(compaction_marker(self._epoch),
+                                   default=str) + "\n")
+            os.replace(tmp, self.path)
+            st = os.stat(self.path)
+            self._offset, self._ino = st.st_size, st.st_ino
+            self._lines = len(self._records) + 1
 
 
 class ResultsDB:

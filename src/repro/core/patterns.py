@@ -57,8 +57,9 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.evalcache import (FileLock, append_jsonl,
-                                  default_namespace, json_safe)
+from repro.core.evalcache import (COMPACT_EV, FileLock, append_jsonl,
+                                  compaction_marker, default_namespace,
+                                  drain_replicas, json_safe)
 from repro.core.kernelcase import KernelCase, Variant
 
 
@@ -150,6 +151,7 @@ class PatternStore:
         self._offset = 0         # how far into the journal we have read
         self._ino: Optional[int] = None
         self._lines = 0          # journal lines behind the merged view
+        self._epoch = 0          # last compaction epoch seen (monotonic)
         self._dirty = False      # journal holds quarantined (bad) lines
         self.quarantined = 0     # corrupt lines shunted aside, cumulative
         if path and os.path.exists(path):
@@ -332,6 +334,12 @@ class PatternStore:
         "hint": one suggested-hint outcome; "acc": a compaction-written
         aggregate (n suggestions, w wins).  Caller holds self._lock."""
         ev = obj["ev"]
+        if ev == COMPACT_EV:
+            # compaction-epoch marker: coordination state for the
+            # replication tails, a no-op for the merged view
+            self._epoch = max(self._epoch,
+                              int(obj.get("epoch", 0) or 0))
+            return
         key = (json.dumps(obj.get("delta", {}), sort_keys=True,
                           default=str),
                str(obj.get("family", "")), str(obj.get("bottleneck", "")))
@@ -492,8 +500,8 @@ class PatternStore:
 
     def _merged_lines(self) -> int:
         """Lines a compaction would write: one per pattern + one per
-        acceptance-ledger bucket."""
-        return len(self._merged) + len(self._acc)
+        acceptance-ledger bucket + the epoch marker."""
+        return len(self._merged) + len(self._acc) + 1
 
     def _maybe_compact_locked(self) -> None:
         if not self.path or self._lines < self.COMPACT_MIN_LINES:
@@ -502,17 +510,29 @@ class PatternStore:
             return
         self._compact_locked()
 
+    def compact(self) -> None:
+        """Force a journal compaction (replication-safe: any live
+        Replicator ending at this journal is drained first, and the
+        rewrite closes with a compaction-epoch marker the tails resync
+        on)."""
+        with self._lock:
+            self._compact_locked()
+
     def _compact_locked(self) -> None:
         """Rewrite the journal as one line per merged pattern, under the
         store lock so no concurrent append lands between the tail read
-        and the ``os.replace`` (it would be silently dropped)."""
+        and the ``os.replace`` (it would be silently dropped).  Caller
+        must NOT hold the store flock: the pre-compaction replica drain
+        appends under it."""
         if not self.path:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
+        drain_replicas(self.path)
         with _StoreLock(self.path):
             self._reload_under_flock_locked()
+            self._epoch += 1
             tmp = f"{self.path}.tmp{os.getpid()}"
             with open(tmp, "w") as f:
                 for p in self._merged.values():
@@ -523,6 +543,8 @@ class PatternStore:
                         {"ev": "acc", "delta": json.loads(dk),
                          "family": fam, "bottleneck": bn,
                          "n": n, "w": w}), default=str) + "\n")
+                f.write(json.dumps(compaction_marker(self._epoch),
+                                   default=str) + "\n")
             os.replace(tmp, self.path)
             st = os.stat(self.path)
             self._offset, self._ino = st.st_size, st.st_ino

@@ -19,6 +19,31 @@ byte-identical line appended independently on both sides crosses the
 link only once — harmless, because identical journal lines carry
 identical information under merge-on-replay.
 
+Journal **compaction** used to be this loop's blind spot: a store's
+``os.replace`` rewrite swaps the inode and invalidates the tail's byte
+offset — a stale offset into the new file ships garbage, and resetting
+to zero re-ships the whole snapshot.  Both sides now coordinate:
+
+* A compacting store first calls ``drain_endpoint`` so everything
+  appended since the last sweep ships verbatim before the rewrite
+  folds it away, and closes the rewritten file with a
+  **compaction-epoch marker** line (``evalcache.compaction_marker``).
+* ``_Tail`` fstats the journal each sweep; on an inode swap or a
+  shrink below its offset it resyncs — resuming just past the last
+  marker, and handing the snapshot lines before it back for
+  digest-filtered *replay* (so an unseen line still crosses once, but
+  nothing already shipped goes again).  A rewrite without a marker (a
+  rotation or truncation underneath us) resets to offset 0 with a
+  warning instead of shipping garbage from the stale offset.
+* Markers and ``"ev"`` event lines inside a replayed snapshot never
+  ship: markers are per-file coordination state, and a compacted
+  aggregate (``{"ev": "acc", ...}``) re-shipped to a peer that already
+  folded the underlying events would double-count them.
+* Shipped batches append under the destination's store flock
+  (``<journal>.lock``), so a batch can't land between a concurrent
+  compaction's snapshot read and its ``os.replace`` (it would be
+  silently dropped by the rewrite).
+
 ``RemoteExecutor`` drives this for fleet hosts configured with journal
 path remaps; it is equally usable standalone (e.g. a cron rsync-less
 mirror of a campaign's results journal).
@@ -28,7 +53,11 @@ from __future__ import annotations
 import hashlib
 import os
 import threading
+import warnings
+import weakref
 from typing import Dict, List, Optional, Tuple
+
+from repro.core.evalcache import FileLock, marker_epoch
 
 
 class _Tail:
@@ -39,35 +68,97 @@ class _Tail:
     def __init__(self, path: str):
         self.path = path
         self.offset = 0
+        self._ino: Optional[int] = None
+        self.resyncs = 0          # compactions/rotations survived
 
-    def lines(self) -> List[bytes]:
+    def lines(self) -> Tuple[List[bytes], List[bytes]]:
+        """``(fresh, replay)``: the complete lines appended since the
+        last sweep, plus — after a compaction/rotation resync — the
+        rewritten file's snapshot lines for digest-filtered replay."""
         if not os.path.exists(self.path):
-            return []
+            return [], []
+        replay: List[bytes] = []
         with open(self.path, "rb") as f:
+            st = os.fstat(f.fileno())
+            if self._ino is not None and \
+                    (st.st_ino != self._ino or st.st_size < self.offset):
+                replay = self._resync(f)
+            self._ino = st.st_ino
             f.seek(self.offset)
             data = f.read()
         end = data.rfind(b"\n") + 1
-        if end == 0:
-            return []
-        self.offset += end
-        return [ln for ln in data[:end].split(b"\n") if ln.strip()]
+        fresh: List[bytes] = []
+        if end:
+            self.offset += end
+            fresh = [ln for ln in data[:end].split(b"\n") if ln.strip()]
+        return fresh, replay
+
+    def _resync(self, f) -> List[bytes]:
+        """The journal was rewritten underneath us.  Resume just past
+        the LAST compaction-epoch marker (everything before it is the
+        compacted snapshot, returned for replay); no marker means a
+        rotation/truncation — restart from 0 and let the digest filter
+        suppress re-ships."""
+        self.resyncs += 1
+        f.seek(0)
+        data = f.read()
+        end = data.rfind(b"\n") + 1
+        snapshot: List[bytes] = []
+        current: List[bytes] = []
+        cut = pos = 0
+        while pos < end:
+            nl = data.find(b"\n", pos)
+            line = data[pos:nl]
+            pos = nl + 1
+            if not line.strip():
+                continue
+            if marker_epoch(line) is not None:
+                snapshot.extend(current)
+                current = []
+                cut = pos
+            else:
+                current.append(line)
+        stale = self.offset
+        self.offset = cut
+        how = ("compaction marker found" if cut
+               else "no marker: rotation/truncation")
+        warnings.warn(
+            f"replication tail {self.path}: journal rewritten underneath "
+            f"the sweep (offset {stale} -> {cut}, {how}); resyncing "
+            f"instead of shipping from the stale offset",
+            RuntimeWarning, stacklevel=3)
+        return snapshot
 
 
 def _append_lines(path: str, lines: List[bytes]) -> None:
-    """One O_APPEND write for the whole batch: concurrent appenders
-    (the destination's own writers included) never interleave partial
-    lines, same contract as ``evalcache.append_jsonl``."""
+    """One O_APPEND write for the whole batch under the destination's
+    store flock: concurrent appenders never interleave partial lines
+    (same contract as ``evalcache.append_jsonl``), and a concurrent
+    compaction can't drop the batch between its snapshot read and its
+    ``os.replace``."""
     if not lines:
         return
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
     data = b"".join(ln + b"\n" for ln in lines)
-    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    with FileLock(path + ".lock"):
+        fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+        try:
+            os.write(fd, data)
+        finally:
+            os.close(fd)
+
+
+def _is_event_line(ln: bytes) -> bool:
+    if b'"ev"' not in ln:
+        return False
+    import json
     try:
-        os.write(fd, data)
-    finally:
-        os.close(fd)
+        obj = json.loads(ln.decode("utf-8", errors="replace"))
+    except ValueError:
+        return False
+    return isinstance(obj, dict) and "ev" in obj
 
 
 class JournalLink:
@@ -84,16 +175,45 @@ class JournalLink:
         ta, tb = self._tails
         crossed = 0
         for src, dst in ((ta, tb), (tb, ta)):
-            fresh: List[bytes] = []
-            for ln in src.lines():
+            fresh, replay = src.lines()
+            out: List[bytes] = []
+            for ln in replay:
+                # snapshot replay: events/aggregates would double-count
+                # on a peer that already folded the underlying lines
+                if _is_event_line(ln):
+                    continue
+                digest = hashlib.sha256(ln).digest()
+                if digest in self._shipped:
+                    continue
+                self._shipped.add(digest)
+                out.append(ln)
+            for ln in fresh:
+                if marker_epoch(ln) is not None:
+                    continue         # markers never cross a link
                 digest = hashlib.sha256(ln).digest()
                 if digest in self._shipped:
                     continue                 # our own earlier shipment
                 self._shipped.add(digest)
-                fresh.append(ln)
-            _append_lines(dst.path, fresh)
-            crossed += len(fresh)
+                out.append(ln)
+            _append_lines(dst.path, out)
+            crossed += len(out)
         return crossed
+
+
+# Endpoint registry: journal path → the live Replicators with a link
+# ending there, so a compacting store in the same process can drain
+# pending shipments before its os.replace (see evalcache.drain_replicas)
+_ENDPOINTS: Dict[str, "weakref.WeakSet"] = {}
+_ENDPOINTS_LOCK = threading.Lock()
+
+
+def drain_endpoint(path: str) -> int:
+    """Synchronously pump every live ``Replicator`` that has ``path`` as
+    a link endpoint; returns lines crossed.  Callers must not hold any
+    store flock (the pump appends under the destinations' flocks)."""
+    with _ENDPOINTS_LOCK:
+        reps = list(_ENDPOINTS.get(os.path.abspath(path), ()))
+    return sum(r.pump() for r in reps)
 
 
 class Replicator:
@@ -119,6 +239,10 @@ class Replicator:
             if link is None:
                 link = JournalLink(a, b)
                 self._links[key] = link
+        with _ENDPOINTS_LOCK:
+            for p in (a, b):
+                _ENDPOINTS.setdefault(os.path.abspath(p),
+                                      weakref.WeakSet()).add(self)
         return link
 
     def pump(self) -> int:

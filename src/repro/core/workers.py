@@ -41,11 +41,21 @@ wall-clock slices serialize on it — build/compile/FE/LLM work overlaps
 freely — so eq. 3's trimmed mean stays clean without the one-exclusive-
 worker pinning this executor used to apply.
 
-Process-level crashes and timeouts are folded into the AER taxonomy as
-``WorkerFault`` (kind crash|timeout) with automatic worker replacement:
-the dead worker is respawned and the job retried on the fresh process;
-only a job that exhausts its retry budget surfaces the fault, which the
-campaign records like any other job failure.
+Process-level crashes, timeouts, and connection failures are folded
+into the AER taxonomy as ``WorkerFault`` (kind crash|timeout|connect)
+with automatic worker replacement: the dead worker is respawned (a
+broken connection re-established under deterministic exponential
+backoff) and the job retried on the fresh process; only a job that
+exhausts its retry budget surfaces the fault, which the campaign
+records like any other job failure.  ``RemoteExecutor`` additionally
+tracks per-host health: a host whose slots keep faulting is
+**quarantined** (its claims released so in-flight cases re-route to
+healthy hosts) and probed with protocol pings under backoff until it
+answers again — a campaign completes degraded rather than stalling.
+All transitions (``host_quarantined`` / ``host_readmitted`` /
+``job_rerouted``) are journaled into the ResultsDB, and the scripted
+fault-injection harness in ``repro.core.chaos`` drives every one of
+these paths deterministically under test.
 
 The LLM proposer's round prompts are coalesced across the concurrent
 cases of an in-process campaign through a shared ``LLMBatcher`` (one
@@ -54,6 +64,7 @@ their own process only.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import select
@@ -64,10 +75,12 @@ import sys
 import tempfile
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.aer import AER, WorkerFault
+from repro.core.chaos import ChaosInjector, FaultPlan
 from repro.core.diagnosis import diagnose_feedback
 from repro.core.evalcache import EvalCache, ResultsDB, json_safe, this_host
 from repro.core.kernelcase import KernelCase
@@ -261,7 +274,7 @@ def _greedy_rounds(job: CaseJob, platform: Platform, res: OptResult,
         diag = diagnose_feedback(feedback, ci_rel=best_ci_rel)
         last_bottleneck = diag.bottleneck
         hints: Optional[List[Pattern]] = None
-        if patterns is not None:
+        if patterns is not None and getattr(cfg, "ppi", True):
             # round boundary: fold other workers' journal appends in, so
             # a win recorded by a concurrent case — possibly in another
             # process — reaches this round's proposal wave (§3.2 PPI).
@@ -680,6 +693,22 @@ class _WorkerProc(_LineChannel):
             pass
 
 
+class _ConnectError(OSError):
+    """Connection *establishment* failed (server down, refused, or the
+    bounded connect timeout elapsed) — distinct from a crash of a live
+    worker, so it surfaces as ``WorkerFault(kind="connect")``."""
+
+
+def backoff_schedule(base_s: float, max_s: float,
+                     attempts: int) -> List[float]:
+    """Deterministic (jitter-free) exponential backoff delays:
+    ``base, 2*base, 4*base, ...`` capped at ``max_s``.  Jitter-free on
+    purpose — the chaos harness asserts reconnect timing, and a single
+    scheduler reconnecting to its own fleet has no thundering herd to
+    spread."""
+    return [min(base_s * (2 ** i), max_s) for i in range(max(0, attempts))]
+
+
 class _SocketWorker(_LineChannel):
     """Scheduler-side handle for one remote worker slot: the exact spec
     protocol ``_WorkerProc`` speaks over pipes, over a TCP connection to
@@ -693,8 +722,13 @@ class _SocketWorker(_LineChannel):
         self.address = address
         self._buf = b""
         host, port = address.rsplit(":", 1)
-        self.sock = socket.create_connection((host, int(port)),
-                                             timeout=connect_timeout_s)
+        try:
+            # bounded: a standing server that is down must fail fast as
+            # a connect fault, not block dispatch for the OS TCP timeout
+            self.sock = socket.create_connection((host, int(port)),
+                                                 timeout=connect_timeout_s)
+        except OSError as e:
+            raise _ConnectError(f"connect {address}: {e}") from e
         self.sock.setblocking(True)
         self._closed = False
 
@@ -772,6 +806,23 @@ class _AffinityRouter:
         with self._cv:
             return self._claims.get(case)
 
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def release_host(self, host: Any) -> List[str]:
+        """Drop every case→host claim ``host`` holds (quarantine path):
+        the next host to pull a job on those cases claims them fresh —
+        affinity warmth is worthless on a host that stopped answering.
+        Returns the released case names."""
+        with self._cv:
+            released = [c for c, h in self._claims.items() if h == host]
+            for c in released:
+                del self._claims[c]
+            self._cv.notify_all()
+            return released
+
     def get(self, host: Any) -> Optional[Tuple]:
         with self._cv:
             while True:
@@ -817,7 +868,8 @@ class SubprocessExecutor(Executor):
     affinity = False          # enable case→host routing (_slot_host)
 
     def __init__(self, workers: Optional[int] = None, *,
-                 timeout_s: Optional[float] = None, retries: int = 1):
+                 timeout_s: Optional[float] = None, retries: int = 1,
+                 chaos: Optional[FaultPlan] = None):
         if workers is None:
             workers = int(os.environ.get(
                 "REPRO_CAMPAIGN_WORKERS", str(os.cpu_count() or 2)))
@@ -827,6 +879,9 @@ class SubprocessExecutor(Executor):
             timeout_s = float(env) if env else None
         self.timeout_s = timeout_s
         self.retries = max(0, retries)
+        # scripted fault plan shipped to spawned workers/servers via the
+        # REPRO_CHAOS env var (repro.core.chaos) — None in production
+        self.chaos = chaos
         from collections import deque
         self.dispatch_log = deque(maxlen=4096)          # (job, slot)
         self._procs: Dict[Any, _WorkerProc] = {}        # slot → process
@@ -866,6 +921,30 @@ class SubprocessExecutor(Executor):
         inject = getattr(job, "inject", None)
         if inject:
             spec["inject"] = inject
+
+    # -- fault-tolerance hooks (RemoteExecutor overrides) --------------
+    def _slot_gate(self, slot: Any, router: "_AffinityRouter",
+                   ctx: WorkerContext, campaign_id: str) -> bool:
+        """Health gate a slot passes before pulling work.  Returning
+        False makes the slot loop come around again without dequeuing
+        (the gate is responsible for pacing — sleep/probe inside);
+        RemoteExecutor holds quarantined hosts here and probes them
+        back to health.  The local fabric has no per-slot health."""
+        return True
+
+    def _note_ok(self, slot: Any) -> None:
+        """A dispatch on ``slot`` completed a protocol exchange."""
+
+    def _note_fault(self, slot: Any, job: CaseJob, kind: str,
+                    router: "_AffinityRouter", ctx: WorkerContext,
+                    campaign_id: str) -> None:
+        """A dispatch on ``slot`` faulted (called before the retry is
+        re-queued, so a quarantining override releases the host's
+        claims first and the retry lands on a healthy host)."""
+
+    def _note_dispatch(self, slot: Any, job: CaseJob, ctx: WorkerContext,
+                       campaign_id: str) -> None:
+        """``job`` is about to be dispatched on ``slot``."""
 
     def run(self, jobs, ctx, *, campaign_id="", stop=None):
         # serialize everything first: a non-wire-safe job must fail the
@@ -914,6 +993,7 @@ class SubprocessExecutor(Executor):
                 spec = dict(spec, stop=True)
             spec = self._spec_for_slot(spec, slot)
             self.dispatch_log.append((job.name, slot))
+            self._note_dispatch(slot, job, ctx, campaign_id)
             try:
                 with self._slot_lock(slot):
                     worker = self._ensure_worker(slot, ctx)
@@ -921,12 +1001,23 @@ class SubprocessExecutor(Executor):
                     reply = worker.recv(self.timeout_s)
             except TimeoutError as e:
                 self._replace_worker(slot)
+                self._note_fault(slot, job, "timeout", router, ctx,
+                                 campaign_id)
                 fault(idx, job, spec, attempt, "timeout", e, slot)
+                return
+            except _ConnectError as e:
+                self._replace_worker(slot)
+                self._note_fault(slot, job, "connect", router, ctx,
+                                 campaign_id)
+                fault(idx, job, spec, attempt, "connect", e, slot)
                 return
             except (EOFError, OSError, BrokenPipeError, ValueError) as e:
                 self._replace_worker(slot)
+                self._note_fault(slot, job, "crash", router, ctx,
+                                 campaign_id)
                 fault(idx, job, spec, attempt, "crash", e, slot)
                 return
+            self._note_ok(slot)
             if reply.get("ok"):
                 res = OptResult.from_dict(reply["result"])
                 if ctx.patterns is not None and not ctx.patterns.path:
@@ -946,6 +1037,8 @@ class SubprocessExecutor(Executor):
         def slot_loop(slot: Any) -> None:
             host = self._slot_host(slot) if self.affinity else None
             while True:
+                if not self._slot_gate(slot, router, ctx, campaign_id):
+                    continue         # gate paces (sleeps/probes) itself
                 item = router.get(host)
                 if item is None:
                     return
@@ -960,16 +1053,20 @@ class SubprocessExecutor(Executor):
         threads = [threading.Thread(target=slot_loop, args=(s,),
                                     name=f"exec-slot{s}", daemon=True)
                    for s in slots]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if not self.persistent:
-            self.close()
-        if ctx.cache is not None:
-            ctx.cache.reload()       # fold workers' entries into our view
-        if ctx.patterns is not None and ctx.patterns.path:
-            ctx.patterns.reload()    # fold workers' recorded patterns too
+        try:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if ctx.cache is not None:
+                ctx.cache.reload()   # fold workers' entries into our view
+            if ctx.patterns is not None and ctx.patterns.path:
+                ctx.patterns.reload()  # fold workers' patterns too
+        finally:
+            # exception-safe: a one-shot fabric must not leak worker
+            # processes when a reload (or a start) raises
+            if not self.persistent:
+                self.close()
         return outcomes
 
     def warm(self, slots: Optional[List[Any]] = None,
@@ -1000,7 +1097,8 @@ class SubprocessExecutor(Executor):
                     self._replace_worker(slot)
             if last is not None:
                 kind = "timeout" if isinstance(last, TimeoutError) \
-                    else "crash"
+                    else ("connect" if isinstance(last, _ConnectError)
+                          else "crash")
                 raise WorkerFault(kind, f"warm:{slot}", str(last)[:500],
                                   attempts=self.retries + 1)
 
@@ -1010,7 +1108,10 @@ class SubprocessExecutor(Executor):
         with self._lock:
             w = self._procs.get(slot)
             if w is None or not w.alive():
-                w = _WorkerProc(_worker_cmd(), _worker_env(), slot)
+                env = _worker_env()
+                if self.chaos is not None:
+                    self.chaos.to_env(env)
+                w = _WorkerProc(_worker_cmd(), env, slot)
                 self._procs[slot] = w
             return w
 
@@ -1090,6 +1191,10 @@ class FleetHost:
     cache_path: str = ""
     patterns_path: str = ""
     db_path: str = ""
+    # bounded TCP connect for socket/spawn transports: a standing server
+    # that is down fails fast as WorkerFault(kind="connect") instead of
+    # blocking dispatch for the OS TCP timeout
+    connect_timeout_s: float = 10.0
 
     @staticmethod
     def from_dict(d: Union[str, Dict[str, Any]]) -> "FleetHost":
@@ -1133,13 +1238,16 @@ class _ServerProc:
     (jax chatter + diagnostics); the bound port is read from the
     ``READY <port>`` stdout line."""
 
-    def __init__(self, host: "FleetHost", timeout_s: float = 120.0):
+    def __init__(self, host: "FleetHost", timeout_s: float = 120.0,
+                 chaos: Optional[FaultPlan] = None):
         self.host = host
         self.log = tempfile.NamedTemporaryFile(
             mode="w+b", prefix=f"repro-fleet-{host.name}-", suffix=".log",
             delete=False)
         env = _worker_env()
         env["REPRO_HOST_ALIAS"] = host.name
+        if chaos is not None:
+            chaos.to_env(env)
         self.proc = subprocess.Popen(
             _remote_worker_cmd() + ["--port", "0", "--alias", host.name],
             env=env, stdin=subprocess.DEVNULL, stdout=subprocess.PIPE,
@@ -1230,7 +1338,12 @@ class RemoteExecutor(SubprocessExecutor):
 
     def __init__(self, hosts: List[Union[str, Dict[str, Any], FleetHost]],
                  *, timeout_s: Optional[float] = None, retries: int = 1,
-                 server_timeout_s: float = 120.0):
+                 server_timeout_s: float = 120.0,
+                 backoff_base_s: float = 0.05, backoff_max_s: float = 2.0,
+                 backoff_attempts: int = 4,
+                 quarantine_after: int = 3,
+                 probe_base_s: float = 0.5, probe_max_s: float = 5.0,
+                 chaos: Optional[FaultPlan] = None):
         hosts = [h if isinstance(h, FleetHost) else FleetHost.from_dict(h)
                  for h in hosts]
         if not hosts:
@@ -1250,12 +1363,148 @@ class RemoteExecutor(SubprocessExecutor):
                 raise ValueError(f"fleet host {h.name}: ssh transport "
                                  f"needs ssh='user@host'")
         super().__init__(sum(max(1, h.slots) for h in hosts),
-                         timeout_s=timeout_s, retries=retries)
+                         timeout_s=timeout_s, retries=retries, chaos=chaos)
         self.hosts: Dict[str, FleetHost] = {h.name: h for h in hosts}
         self.server_timeout_s = server_timeout_s
+        # reconnect/backoff knobs: a dead slot connection is
+        # re-established under a deterministic exponential schedule
+        # instead of staying dead until the next dispatch
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.backoff_attempts = max(0, backoff_attempts)
+        # health/quarantine knobs: quarantine_after consecutive faults
+        # sideline a host (while ≥1 healthy host remains); probes pace
+        # on their own backoff schedule until the host answers a ping
+        self.quarantine_after = max(1, quarantine_after)
+        self.probe_base_s = probe_base_s
+        self.probe_max_s = probe_max_s
         self._servers: Dict[str, _ServerProc] = {}
         self._server_lock = threading.Lock()
         self._replicator = None       # lazy repro.core.replicate.Replicator
+        self._health_lock = threading.Lock()
+        self._consec_faults: Dict[str, int] = {}
+        self._quarantined: Dict[str, float] = {}   # host → next probe t
+        self._probe_idx: Dict[str, int] = {}       # host → probe attempt
+        self._rerouted: Dict[str, str] = {}        # case → origin host
+        self._ever_connected: set = set()          # slots once connected
+        self.reconnects = 0
+        self.quarantines = 0
+        self.readmissions = 0
+        self.reroutes = 0
+        # interpreter-exit backstop: spawned servers must die even when
+        # a crashed campaign never reaches close().  A weakref keeps
+        # atexit's registry from pinning the executor alive.
+        ref = weakref.ref(self)
+
+        def _cleanup(ref=ref):
+            ex = ref()
+            if ex is not None:
+                try:
+                    ex.close()
+                except Exception:  # noqa: BLE001 — interpreter teardown
+                    pass
+        atexit.register(_cleanup)
+
+    # -- health/fault telemetry ----------------------------------------
+    def fleet_events(self) -> Dict[str, int]:
+        """Lifetime fault-tolerance counters (journaled by the campaign
+        into its ``campaign_end`` record)."""
+        with self._health_lock:
+            return {"reconnects": self.reconnects,
+                    "quarantines": self.quarantines,
+                    "readmissions": self.readmissions,
+                    "reroutes": self.reroutes}
+
+    def _journal(self, ctx: Optional[WorkerContext], campaign_id: str,
+                 kind: str, **fields: Any) -> None:
+        if ctx is not None and ctx.db is not None:
+            try:
+                ctx.db.append(kind, campaign=campaign_id, **fields)
+            except OSError:
+                pass    # a full disk must not turn degradation into a hang
+
+    def _note_ok(self, slot: Tuple[str, int]) -> None:
+        with self._health_lock:
+            self._consec_faults[slot[0]] = 0
+
+    def _note_fault(self, slot, job, kind, router, ctx, campaign_id):
+        host = slot[0]
+        with self._health_lock:
+            self._consec_faults[host] = \
+                self._consec_faults.get(host, 0) + 1
+            n = self._consec_faults[host]
+            if host in self._quarantined or n < self.quarantine_after:
+                return
+            healthy = [h for h in self.hosts
+                       if h != host and h not in self._quarantined]
+            if not healthy:
+                return    # never quarantine the last healthy host
+            self._quarantined[host] = time.monotonic()
+            self._probe_idx[host] = 0
+            self.quarantines += 1
+        released = router.release_host(host)
+        with self._health_lock:
+            for c in set(released) | {job.case.name}:
+                self._rerouted[c] = host
+        self._journal(ctx, campaign_id, "host_quarantined", host=host,
+                      fault=kind, job=job.name, consecutive_faults=n,
+                      released_cases=sorted(released))
+
+    def _note_dispatch(self, slot, job, ctx, campaign_id):
+        case = job.case.name
+        with self._health_lock:
+            origin = self._rerouted.pop(case, None)
+            if origin is None or origin == slot[0]:
+                return
+            self.reroutes += 1
+        self._journal(ctx, campaign_id, "job_rerouted", job=job.name,
+                      case=case, origin=origin, host=slot[0])
+
+    def _probe_delay(self, attempt: int) -> float:
+        sched = backoff_schedule(self.probe_base_s, self.probe_max_s,
+                                 attempt + 1)
+        return sched[-1] if sched else self.probe_base_s
+
+    def _slot_gate(self, slot, router, ctx, campaign_id) -> bool:
+        host = slot[0]
+        if router.closed:
+            return True    # let get() drain and release the slot thread
+        with self._health_lock:
+            since = self._quarantined.get(host)
+            if since is None:
+                return True
+            attempt = self._probe_idx.get(host, 0)
+            due = since + self._probe_delay(attempt)
+            wait = due - time.monotonic()
+        if wait > 0:
+            time.sleep(min(wait, 0.1))
+            return False
+        # probe: re-establish this slot's connection and ping it.  For a
+        # spawn host this respawns the dead server (READY re-handshake
+        # in _server_port) — exactly the recovery a readmission needs.
+        try:
+            with self._slot_lock(slot):
+                w = self._ensure_worker(slot, ctx)
+                w.send({"ping": True})
+                w.recv(min(self.server_timeout_s, 30.0))
+        except (TimeoutError, EOFError, OSError, BrokenPipeError,
+                ValueError):
+            self._replace_worker(slot)
+            with self._health_lock:
+                if host in self._quarantined:
+                    self._probe_idx[host] = \
+                        self._probe_idx.get(host, 0) + 1
+                    self._quarantined[host] = time.monotonic()
+            return False
+        with self._health_lock:
+            if host not in self._quarantined:
+                return True    # another slot's probe already readmitted
+            del self._quarantined[host]
+            self._probe_idx.pop(host, None)
+            self._consec_faults[host] = 0
+            self.readmissions += 1
+        self._journal(ctx, campaign_id, "host_readmitted", host=host)
+        return True
 
     # -- slots ---------------------------------------------------------
     def _all_slots(self) -> List[Tuple[str, int]]:
@@ -1321,18 +1570,21 @@ class RemoteExecutor(SubprocessExecutor):
         return self._replicator
 
     def run(self, jobs, ctx, *, campaign_id="", stop=None):
+        with self._health_lock:
+            self._rerouted.clear()
         repl = self._ensure_replicator(ctx)
-        outcomes = super().run(jobs, ctx, campaign_id=campaign_id,
+        try:
+            return super().run(jobs, ctx, campaign_id=campaign_id,
                                stop=stop)
-        if repl is not None:
-            # final drain: every append a host made during the campaign
-            # is home before the scheduler reads winners/journals
-            repl.pump()
-            if ctx.cache is not None:
-                ctx.cache.reload()
-            if ctx.patterns is not None and ctx.patterns.path:
-                ctx.patterns.reload()
-        return outcomes
+        finally:
+            if repl is not None:
+                # final drain: every append a host made during the
+                # campaign is home before the scheduler reads winners
+                repl.pump()
+                if ctx.cache is not None:
+                    ctx.cache.reload()
+                if ctx.patterns is not None and ctx.patterns.path:
+                    ctx.patterns.reload()
 
     # -- transports ----------------------------------------------------
     def _server_port(self, host: FleetHost) -> int:
@@ -1341,7 +1593,8 @@ class RemoteExecutor(SubprocessExecutor):
             if srv is None or not srv.alive():
                 if srv is not None:
                     srv.kill()
-                srv = _ServerProc(host, timeout_s=self.server_timeout_s)
+                srv = _ServerProc(host, timeout_s=self.server_timeout_s,
+                                  chaos=self.chaos)
                 self._servers[host.name] = srv
             return srv.port
 
@@ -1357,7 +1610,8 @@ class RemoteExecutor(SubprocessExecutor):
         else:
             raise ValueError(f"fleet host {host.name}: unknown transport "
                              f"{host.transport!r} (spawn|socket|ssh)")
-        return _SocketWorker(address, slot)
+        return _SocketWorker(address, slot,
+                             connect_timeout_s=host.connect_timeout_s)
 
     def _ensure_worker(self, slot: Tuple[str, int],
                        ctx: Optional[WorkerContext]):
@@ -1368,7 +1622,30 @@ class RemoteExecutor(SubprocessExecutor):
             w = self._procs.get(slot)
             if w is not None and w.alive():
                 return w
-        w = self._connect(slot)
+        # reconnect with deterministic exponential backoff: a spawn
+        # server mid-restart (or a standing server bouncing) answers a
+        # later attempt, so one blip doesn't burn a whole job retry
+        delays = backoff_schedule(self.backoff_base_s, self.backoff_max_s,
+                                  self.backoff_attempts)
+        last: Optional[BaseException] = None
+        w = None
+        for i in range(len(delays) + 1):
+            try:
+                w = self._connect(slot)
+                break
+            except (EOFError, TimeoutError, OSError) as e:
+                last = e        # _ConnectError is an OSError subclass
+                if i < len(delays):
+                    time.sleep(delays[i])
+        if w is None:
+            raise _ConnectError(
+                f"slot {slot}: connect failed after "
+                f"{len(delays) + 1} attempts: {last}") from last
+        with self._health_lock:
+            if slot in self._ever_connected:
+                self.reconnects += 1
+            else:
+                self._ever_connected.add(slot)
         with self._lock:
             self._procs[slot] = w
         return w
@@ -1456,6 +1733,20 @@ class _SpecServer:
         self._caches: Dict[Tuple, EvalCache] = {}
         self._stores: Dict[Tuple, PatternStore] = {}
         self._dbs: Dict[str, ResultsDB] = {}
+        # scripted fault injection (repro.core.chaos): None outside the
+        # chaos harness — REPRO_CHAOS reaches spawned workers via the
+        # executor env stamp, a standing server via its own environment
+        self._chaos = ChaosInjector.from_env()
+
+    def handle_with_faults(self, spec: Dict[str, Any]
+                           ) -> Tuple[Dict[str, Any], List[Any]]:
+        """``(reply, drop_faults)``: fire any scripted faults due for
+        this spec (kill/stall/poison happen here, in place), then handle
+        it.  The returned ``drop_connection`` faults are for the
+        transport to honor at reply time — only the TCP server can tear
+        a line mid-send; stdio callers use ``handle`` and ignore them."""
+        drops = self._chaos.fire(spec) if self._chaos is not None else []
+        return self.handle(spec), drops
 
     def handle(self, spec: Dict[str, Any]) -> Dict[str, Any]:
         try:
@@ -1533,7 +1824,9 @@ def worker_main() -> int:
             reply: Dict[str, Any] = {"ok": False, "type": "ProtocolError",
                                      "error": f"{e}"[:1000]}
         else:
-            reply = server.handle(spec)
+            # drop_connection faults are TCP-only; over pipes they are
+            # collected and ignored (the pipe can't tear a line cleanly)
+            reply, _ = server.handle_with_faults(spec)
         proto.write(json.dumps(json_safe(reply), default=str) + "\n")
         proto.flush()
     return 0

@@ -333,6 +333,83 @@ def test_journal_link_ships_both_ways_without_echo(tmp_path):
     assert b'{"k": "torn-now-whole"}' in _lines(b)
 
 
+def test_tail_resets_on_truncated_or_rotated_source(tmp_path):
+    """Regression: a source journal truncated/rotated below the tail's
+    offset (no compaction marker) must reset to a safe offset with a
+    warning — never read from the stale offset (which shipped garbage
+    or raised) and never duplicate lines already shipped."""
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    link = JournalLink(a, b)
+    with open(a, "w") as f:
+        f.write('{"k": "a1"}\n{"k": "a2"}\n{"k": "a3"}\n')
+    assert link.pump() == 3
+    # rotate: the file shrinks below the tail offset, no marker inside
+    with open(a, "w") as f:
+        f.write('{"k": "a4"}\n')
+    with pytest.warns(RuntimeWarning, match="rotation/truncation"):
+        assert link.pump() == 1            # only the new line crosses
+    got = _lines(b)
+    assert got.count(b'{"k": "a4"}') == 1
+    assert got.count(b'{"k": "a1"}') == 1  # no re-ship of old lines
+    assert link.pump() == 0                # stable afterwards
+
+
+def test_journal_link_no_duplicates_under_interleaved_writes(tmp_path):
+    """Echo-suppression soak: both endpoints appending between pumps —
+    after convergence each side holds exactly one copy of every line."""
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    link = JournalLink(a, b)
+    expected = set()
+    for i in range(6):
+        la = json.dumps({"side": "a", "n": i}).encode()
+        lb = json.dumps({"side": "b", "n": i}).encode()
+        expected.update((la, lb))
+        with open(a, "ab") as f:
+            f.write(la + b"\n")
+        if i % 2 == 0:
+            link.pump()                    # interleave: ship mid-stream
+        with open(b, "ab") as f:
+            f.write(lb + b"\n")
+        link.pump()
+    for _ in range(3):
+        link.pump()                        # converge
+    for path in (a, b):
+        got = _lines(path)
+        assert set(got) == expected
+        assert len(got) == len(expected), \
+            f"duplicate lines in {path} after convergence"
+
+
+def test_remote_executor_close_is_idempotent_and_exception_safe(tmp_path):
+    """Leak-fix regression: close() twice is fine, and a run() that
+    raises still tears down the spawned servers (no orphan
+    remote_worker.py processes holding the port)."""
+    ex = RemoteExecutor([{"name": "leakA"}])
+    port = ex._server_port(ex.hosts["leakA"])     # spawn the server
+    assert port > 0
+    srv = ex._servers["leakA"]
+    assert srv.alive()
+    ex.close()
+    assert not srv.alive() and ex._servers == {}
+    ex.close()                                    # idempotent
+
+    class Boom(RuntimeError):
+        pass
+
+    ex = RemoteExecutor([{"name": "leakB"}])
+    ex._server_port(ex.hosts["leakB"])
+    srv = ex._servers["leakB"]
+
+    def explode(*a, **k):
+        raise Boom("mid-campaign scheduler error")
+
+    ex._slots_for = explode
+    with pytest.raises(Boom):
+        ex.run(_fleet_jobs()[:1], _ctx(), campaign_id="boom")
+    ex.close()
+    assert not srv.alive()
+
+
 def test_replicator_background_convergence(tmp_path):
     a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
     rep = Replicator(interval_s=0.05).start()

@@ -166,7 +166,11 @@ def test_legacy_array_store_migrates_to_journal(tmp_path):
     assert len(s) == 1 and s.patterns[0].gain == 2.5
     with open(path) as f:                    # rewritten as JSONL
         lines = [json.loads(line) for line in f if line.strip()]
-    assert len(lines) == 1 and lines[0]["delta"] == {"block_m": 128}
+    # the rewrite closes with a compaction-epoch marker (replication
+    # coordination, repro.core.replicate) — patterns are the rest
+    pats = [ln for ln in lines if ln.get("ev") != "compact"]
+    assert len(pats) == 1 and pats[0]["delta"] == {"block_m": 128}
+    assert lines[-1].get("ev") == "compact"
 
 
 # ------------------------------------------------ multi-process hammer ----
